@@ -1,0 +1,56 @@
+"""Benchmark utilities: timing, table formatting, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kw) -> float:
+    """Median wall seconds of a jax function (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+class Table:
+    """Paper-style profiling table: function, time, % total, speedup."""
+
+    def __init__(self, title: str):
+        self.title = title
+        self.rows: list[tuple] = []
+
+    def add(self, func: str, calls: int, base_s: float, opt_s: float):
+        self.rows.append((func, calls, base_s, opt_s))
+
+    def emit(self) -> list[str]:
+        base_total = sum(r[2] for r in self.rows)
+        opt_total = sum(r[3] for r in self.rows)
+        lines = [f"# {self.title}",
+                 f"{'function':28s} {'calls':>6s} {'base_s':>10s} "
+                 f"{'%base':>7s} {'opt_s':>10s} {'%opt':>7s} {'speedup':>8s}"]
+        for func, calls, b, o in self.rows:
+            lines.append(
+                f"{func:28s} {calls:6d} {b:10.4f} "
+                f"{100*b/max(base_total,1e-12):6.1f}% {o:10.4f} "
+                f"{100*o/max(opt_total,1e-12):6.1f}% {b/max(o,1e-12):8.2f}")
+        lines.append(f"{'TOTAL':28s} {'':6s} {base_total:10.4f} "
+                     f"{'':7s} {opt_total:10.4f} {'':7s} "
+                     f"{base_total/max(opt_total,1e-12):8.2f}")
+        return lines
+
+    def csv_rows(self) -> list[str]:
+        out = []
+        for func, calls, b, o in self.rows:
+            us = o * 1e6
+            out.append(f"{self.title}/{func},{us:.1f},"
+                       f"speedup={b/max(o,1e-12):.2f}")
+        return out

@@ -1,0 +1,101 @@
+"""Benchmark harness entrypoint — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus human-readable tables
+to stderr) and appends the GBDT kernel roofline estimates for the TPU
+target.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def eprint(*a):
+    print(*a, file=sys.stderr, flush=True)
+
+
+def gbdt_kernel_roofline() -> list[str]:
+    """Derived TPU-v5e roofline for the Pallas GBDT kernels (table D):
+    arithmetic intensity and the bound each kernel hits.
+
+    Workload: N=100k samples, F=200 features, B=255 borders, T=1000
+    trees, depth 6, C=1 — Santander-scale batch prediction.
+    """
+    PEAK, HBM = 197e12, 819e9
+    N, F, B, T, D, C = 100_000, 200, 255, 1000, 6, 1
+    L = 2 ** D
+    rows = []
+
+    def row(name, flops, bytes_, note):
+        ai = flops / bytes_
+        t_c, t_m = flops / PEAK, bytes_ / HBM
+        bound = "compute" if t_c > t_m else "memory"
+        t = max(t_c, t_m)
+        rows.append(f"roofline/{name},{t*1e6:.2f},"
+                    f"AI={ai:.2f};bound={bound};{note}")
+        return t
+
+    # binarize: N*F*B compares; reads x (N*F*4) + borders, writes bins
+    row("binarize", N * F * B, (N * F * 4) * 2 + B * F * 4,
+        "VPU compare-accumulate")
+    # leaf_index: one-hot gather matmul (T*D x F) @ (F x N) + mask ops
+    row("leaf_index", 2 * T * D * F * N, N * F * 4 + N * T * 4 + T * D * 8,
+        "MXU one-hot gather")
+    # leaf_gather: onehot (N x T*L) @ (T*L x C)
+    row("leaf_gather", 2 * N * T * L * C, N * T * 4 + T * L * C * 4 + N * C * 4,
+        "MXU onehot-matmul (paper left scalar)")
+    # fused predict: same flops, bins/idx never hit HBM
+    row("fused_predict", N * F * B + 2 * T * D * F * N + 2 * N * T * L * C,
+        N * F * 4 + B * F * 4 + T * (D * 8 + L * C * 4) + N * C * 4,
+        "fused: no bins/idx HBM roundtrip")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI)")
+    ap.add_argument("--tables", default="2,3,4,5,6")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import tables as T
+
+    wanted = set(args.tables.split(","))
+    csv_rows: list[str] = []
+    jobs = []
+    if "2" in wanted:
+        jobs.append(lambda: T.table2_yearpred(
+            n_samples=300 if args.quick else 1000,
+            n_trees=100 if args.quick else 500))
+    if "3" in wanted:
+        jobs.append(lambda: T.table3_covertype(
+            n_samples=300 if args.quick else 1000,
+            n_trees=60 if args.quick else 300))
+    if "4" in wanted:
+        jobs.append(lambda: T.table4_embeddings(
+            n_queries=100 if args.quick else 200,
+            n_trees=50 if args.quick else 200))
+    if "5" in wanted:
+        jobs.append(lambda: T.table5_full(scale=0.005 if args.quick
+                                          else 0.02))
+    if "6" in wanted:
+        jobs.append(lambda: T.table6_batch_scaling(
+            n_trees=60 if args.quick else 300))
+
+    for job in jobs:
+        tbl = job()
+        for line in tbl.emit():
+            eprint(line)
+        eprint("")
+        csv_rows.extend(tbl.csv_rows())
+
+    csv_rows.extend(gbdt_kernel_roofline())
+    print("name,us_per_call,derived")
+    for r in csv_rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Scalar-loop implementations of the paper's hotspots — the "Baseline"
+column of Tables 2-4.
+
+The paper's baseline is CatBoost's scalar C++ compiled for RISC-V without
+vectorization; the optimized version is the RVV-intrinsic rewrite.  The
+CPU analog here: nested `lax.fori_loop`s with per-element dynamic updates
+(XLA cannot vectorize across the loop-carried scatter), versus the
+vectorized jnp/Pallas formulations in repro.kernels.  Both run through
+XLA on the same machine, so the ratio isolates vectorization — the same
+quantity the paper reports.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def binarize_scalar(x: jax.Array, borders: jax.Array) -> jax.Array:
+    """Per-sample, per-feature, per-border scalar compare-accumulate."""
+    N, F = x.shape
+    B = borders.shape[0]
+
+    def sample(i, out):
+        def feat(j, out):
+            def bor(b, acc):
+                return acc + jnp.where(x[i, j] > borders[b, j], 1, 0)
+            v = jax.lax.fori_loop(0, B, bor, jnp.int32(0))
+            return out.at[i, j].set(v)
+        return jax.lax.fori_loop(0, F, feat, out)
+
+    return jax.lax.fori_loop(0, N, sample, jnp.zeros((N, F), jnp.int32))
+
+
+@jax.jit
+def leaf_index_scalar(bins: jax.Array, sf: jax.Array, sb: jax.Array
+                      ) -> jax.Array:
+    """CalcIndexesBasic baseline: scalar bit accumulation per (n, t)."""
+    N = bins.shape[0]
+    T, D = sf.shape
+
+    def sample(n, out):
+        def tree(t, out):
+            def depth(d, idx):
+                go = jnp.where(bins[n, sf[t, d]] >= sb[t, d], 1, 0)
+                return idx | (go << d)
+            idx = jax.lax.fori_loop(0, D, depth, jnp.int32(0))
+            return out.at[n, t].set(idx)
+        return jax.lax.fori_loop(0, T, tree, out)
+
+    return jax.lax.fori_loop(0, N, sample, jnp.zeros((N, T), jnp.int32))
+
+
+@jax.jit
+def leaf_gather_scalar(idx: jax.Array, lv: jax.Array) -> jax.Array:
+    """CalculateLeafValues baseline: scalar gather-accumulate."""
+    N, T = idx.shape
+    C = lv.shape[2]
+
+    def sample(n, out):
+        def tree(t, acc):
+            return acc + lv[t, idx[n, t], :]
+        acc = jax.lax.fori_loop(0, T, tree, jnp.zeros((C,), jnp.float32))
+        return out.at[n].set(acc)
+
+    return jax.lax.fori_loop(0, N, sample, jnp.zeros((N, C), jnp.float32))
+
+
+@jax.jit
+def l2sq_scalar(q: jax.Array, refs: jax.Array) -> jax.Array:
+    """L2SqrDistance baseline: scalar FMA loop per reference row."""
+    M, K = refs.shape
+
+    def row(m, out):
+        def dim(k, acc):
+            d = refs[m, k] - q[k]
+            return acc + d * d
+        return out.at[m].set(jax.lax.fori_loop(0, K, dim, jnp.float32(0)))
+
+    return jax.lax.fori_loop(0, M, row, jnp.zeros((M,), jnp.float32))
+
+
+def predict_scalar(x, borders, sf, sb, lv):
+    """End-to-end scalar prediction (baseline CalcTreesBlockedImpl path)."""
+    bins = binarize_scalar(x, borders)
+    idx = leaf_index_scalar(bins, sf, sb)
+    return leaf_gather_scalar(idx, lv)

@@ -1,0 +1,45 @@
+"""The paper's image-embeddings workload: backbone embeddings -> KNN
+features (L2SqrDistance hotspot) -> GBDT multiclass head.
+
+Run:  PYTHONPATH=src python examples/embeddings_knn.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import boosting, knn, losses, predict
+from repro.core.boosting import BoostingParams
+from repro.data import synthetic
+from repro.serving.engine import EmbeddingGBDTPipeline
+
+
+def main():
+    ds = synthetic.load("image_embeddings")
+    print(f"embeddings: train {ds.emb_train.shape} test {ds.emb_test.shape}")
+
+    feat = knn.KNNFeaturizer(jnp.asarray(ds.emb_train),
+                             jnp.asarray(ds.y_train),
+                             n_classes=ds.n_classes, k=16)
+    x_train = knn.augment_with_knn(ds.x_train, ds.emb_train, feat)
+    print(f"augmented features: {x_train.shape} "
+          f"(+{feat.n_features} KNN features)")
+
+    loss = losses.make_loss("multiclass", n_classes=ds.n_classes)
+    ens, hist = boosting.fit(
+        x_train, ds.y_train, loss=loss,
+        params=BoostingParams(n_trees=120, depth=4, learning_rate=0.1))
+
+    pipeline = EmbeddingGBDTPipeline(feat, ens)
+    pred = pipeline.predict(ds.emb_test)
+    acc = float((pred == ds.y_test).mean())
+    print(f"test accuracy: {acc:.4f} (paper reports 0.802 on real VOC)")
+
+    # baseline without KNN features, for the ablation
+    ens0, _ = boosting.fit(ds.x_train, ds.y_train, loss=loss,
+                           params=BoostingParams(n_trees=120, depth=4,
+                                                 learning_rate=0.1))
+    pred0 = predict.predict_class(ens0, jnp.asarray(ds.x_test))
+    print(f"without KNN features: {float((np.asarray(pred0) == ds.y_test).mean()):.4f}")
+
+
+if __name__ == "__main__":
+    main()

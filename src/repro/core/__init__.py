@@ -1,0 +1,6 @@
+"""Core: the paper's contribution — vectorized oblivious-tree GBDT in JAX.
+
+Prediction pipeline (paper fig. 1) lives in `predict`; training substrate
+in `boosting`; model structure in `trees`; KNN embedding features in `knn`.
+"""
+from repro.core import boosting, knn, losses, predict, quantize, trees  # noqa: F401

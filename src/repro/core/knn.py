@@ -1,0 +1,68 @@
+"""KNN embedding featurizer (paper: image-embeddings workload).
+
+CatBoost's embedding features run KNN over stored training embeddings;
+the hotspot is L2SqrDistance (paper Table 4: 91.6% of total time before
+vectorization).  Features produced per query embedding:
+  - per-class fraction among the k nearest neighbours   (C features)
+  - mean distance to the k nearest                      (1 feature)
+
+The distance computation uses the MXU matrix kernel (beyond-paper batched
+form); `rowwise=True` switches to the paper-faithful per-query kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(eq=False)
+class KNNFeaturizer:
+    train_embeddings: jax.Array       # (M, K) float32
+    train_labels: jax.Array           # (M,) int32
+    n_classes: int
+    k: int = 16
+
+    @property
+    def n_features(self) -> int:
+        return self.n_classes + 1
+
+    def transform(self, queries: jax.Array, *, backend: str = "auto",
+                  rowwise: bool = False, batch_size: int = 4096
+                  ) -> jax.Array:
+        """(Q, K) embeddings -> (Q, n_classes + 1) KNN features."""
+        outs = []
+        for s in range(0, queries.shape[0], batch_size):
+            q = queries[s:s + batch_size]
+            if rowwise:
+                dists = jnp.stack([
+                    ops.l2sq_rowwise(q[i], self.train_embeddings,
+                                     backend=backend)
+                    for i in range(q.shape[0])])
+            else:
+                dists = ops.l2sq_matrix(q, self.train_embeddings,
+                                        backend=backend)
+            outs.append(self._features_from_dists(dists))
+        return jnp.concatenate(outs, axis=0)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _features_from_dists(self, dists: jax.Array) -> jax.Array:
+        neg_top, nbr_idx = jax.lax.top_k(-dists, self.k)        # (Q, k)
+        nbr_labels = self.train_labels[nbr_idx]                 # (Q, k)
+        onehot = jax.nn.one_hot(nbr_labels, self.n_classes)     # (Q, k, C)
+        frac = jnp.mean(onehot, axis=1)                         # (Q, C)
+        mean_dist = jnp.mean(-neg_top, axis=1, keepdims=True)   # (Q, 1)
+        return jnp.concatenate([frac, mean_dist], axis=1)
+
+
+def augment_with_knn(x: np.ndarray, emb: np.ndarray,
+                     featurizer: KNNFeaturizer, **kw) -> np.ndarray:
+    """Concatenate tabular features with KNN features over embeddings."""
+    feats = featurizer.transform(jnp.asarray(emb), **kw)
+    return np.concatenate([np.asarray(x, np.float32), np.asarray(feats)],
+                          axis=1)

@@ -1,0 +1,116 @@
+"""Oblivious-tree ensemble: the CatBoost model structure, as a JAX pytree.
+
+Structure-of-arrays layout (exactly what the paper's hotspots consume):
+  split_features (T, D) int32 — feature id tested at depth d of tree t
+  split_bins     (T, D) int32 — border id; sample goes right iff bin >= split_bin
+  leaf_values    (T, 2^D, C) float32
+  borders        (B, F) float32 — per-feature bin borders (padded with +inf)
+  n_borders      (F,)   int32   — true border count per feature
+
+All trees share a single depth D (CatBoost pads shallower trees the same
+way: repeat a split or use an always-false one; we use split_bin = PAD so
+the padded levels always go left).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD_SPLIT_BIN = 1 << 30
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ObliviousEnsemble:
+    split_features: jax.Array    # (T, D) int32
+    split_bins: jax.Array        # (T, D) int32
+    leaf_values: jax.Array       # (T, 2^D, C) float32
+    borders: jax.Array           # (B, F) float32
+    n_borders: jax.Array         # (F,) int32
+    base_score: jax.Array = None  # (C,) float32 additive offset
+
+    def __post_init__(self):
+        if self.base_score is None:
+            object.__setattr__(
+                self, "base_score",
+                jnp.zeros((self.leaf_values.shape[2],), jnp.float32))
+
+    @property
+    def n_trees(self) -> int:
+        return self.split_features.shape[0]
+
+    @property
+    def depth(self) -> int:
+        return self.split_features.shape[1]
+
+    @property
+    def n_outputs(self) -> int:
+        return self.leaf_values.shape[2]
+
+    @property
+    def n_features(self) -> int:
+        return self.borders.shape[1]
+
+    def slice_trees(self, start: int, stop: int) -> "ObliviousEnsemble":
+        """Tree-block view (the paper's CalcTreesBlockedImpl granularity)."""
+        return dataclasses.replace(
+            self,
+            split_features=self.split_features[start:stop],
+            split_bins=self.split_bins[start:stop],
+            leaf_values=self.leaf_values[start:stop],
+        )
+
+    # -- persistence (used by serving + checkpoint tests) ------------------
+    def save(self, path: str | pathlib.Path) -> None:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        np.savez(
+            path,
+            split_features=np.asarray(self.split_features),
+            split_bins=np.asarray(self.split_bins),
+            leaf_values=np.asarray(self.leaf_values),
+            borders=np.asarray(self.borders),
+            n_borders=np.asarray(self.n_borders),
+            base_score=np.asarray(self.base_score),
+        )
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "ObliviousEnsemble":
+        with np.load(path) as z:
+            return cls(**{k: jnp.asarray(z[k]) for k in z.files})
+
+    def describe(self) -> dict[str, Any]:
+        return dict(n_trees=self.n_trees, depth=self.depth,
+                    n_outputs=self.n_outputs, n_features=self.n_features,
+                    n_leaf_params=int(np.prod(self.leaf_values.shape)))
+
+    def describe_json(self) -> str:
+        return json.dumps(self.describe())
+
+
+def empty_ensemble(n_features: int, depth: int, n_outputs: int,
+                   borders: jax.Array, n_borders: jax.Array
+                   ) -> ObliviousEnsemble:
+    return ObliviousEnsemble(
+        split_features=jnp.zeros((0, depth), jnp.int32),
+        split_bins=jnp.zeros((0, depth), jnp.int32),
+        leaf_values=jnp.zeros((0, 2 ** depth, n_outputs), jnp.float32),
+        borders=borders,
+        n_borders=n_borders,
+    )
+
+
+def concat_ensembles(a: ObliviousEnsemble, b: ObliviousEnsemble
+                     ) -> ObliviousEnsemble:
+    return dataclasses.replace(
+        a,
+        split_features=jnp.concatenate([a.split_features, b.split_features]),
+        split_bins=jnp.concatenate([a.split_bins, b.split_bins]),
+        leaf_values=jnp.concatenate([a.leaf_values, b.leaf_values]),
+    )

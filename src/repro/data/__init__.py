@@ -1,0 +1,2 @@
+"""Data substrate: synthetic paper workloads + batching/sharding pipeline."""
+from repro.data import pipeline, synthetic  # noqa: F401

@@ -1,0 +1,2 @@
+"""Distribution substrate: sharding rules, collectives, overlap tricks."""
+from repro.distributed import collectives, sharding  # noqa: F401

@@ -1,0 +1,204 @@
+"""Sharding rule engine: parameter / batch / cache / optimizer-state
+PartitionSpecs for the production meshes.
+
+Strategy (DESIGN.md SS5):
+  * batch dims shard over ("pod", "data")   [data parallel]
+  * TP over "model": attention head projections (when head counts divide
+    the axis), MLP d_ff, vocab logits
+  * MoE: expert axis over "model" (EP) when n_experts divides it, else
+    d_ff inside experts (TP) — cfg.moe_shard
+  * FSDP (cfg.fsdp): weights additionally shard over "data" on the
+    non-TP matrix dim; optimizer state follows (ZeRO-ish)
+  * decode KV caches shard the *sequence* dim over "model" (GQA kv-head
+    counts of 1/2/8 cannot divide a 16-way axis; sequence always can)
+  * mamba TP note: d_inner-sharding would split B/C state projections
+    across shards (collectives inside the recurrence); we keep SSM block
+    weights DP/FSDP-only and shard the decode state over heads instead.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_size(mesh: Mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, *, max_positions: int = 0):
+    """Spec tree matching transformer.param_shapes(cfg) structure."""
+    shapes = tf.param_shapes(cfg, max_positions=max_positions)
+    ms = _model_size(mesh)
+    fsdp = "data" if (cfg.fsdp and "data" in mesh.axis_names) else None
+    q_ok = cfg.n_heads and cfg.n_heads % ms == 0
+    kv_ok = cfg.n_kv_heads and cfg.n_kv_heads % ms == 0
+    ep_ok = cfg.n_experts and cfg.n_experts % ms == 0 \
+        and cfg.moe_shard in ("expert", "expert2d")
+
+    def spec_for(path: str, shape: tuple) -> P:
+        stacked = path.startswith(("blocks/", "enc_blocks/", "dec_blocks/"))
+        lead = (None,) if stacked else ()
+        name = path.split("/")[-1]
+        if name.startswith("x_"):
+            name = name[2:]
+        if name in ("embed",):
+            return P(None, "model")
+        if name == "lm_head":
+            return P(fsdp, "model")
+        if name in ("wq", "wo") and not q_ok:
+            return P(*lead, fsdp, None) if name == "wq" \
+                else P(*lead, None, fsdp)
+        if name in ("wk", "wv") and not kv_ok:
+            return P(*lead, fsdp, None)
+        if name in ("wq", "wk", "wv"):
+            return P(*lead, fsdp, "model")
+        if name == "wo":
+            return P(*lead, "model", fsdp)
+        if name == "router":
+            return P(*lead, fsdp, None)
+        if name in ("w_gate", "w_in") and cfg.n_experts and stacked:
+            if ep_ok and cfg.moe_shard == "expert2d":
+                # EP on model x d_ff on data: weights fully sharded, no
+                # FSDP all-gather; activations reshard instead
+                return P(*lead, "model", None, "data")
+            return (P(*lead, "model", fsdp, None) if ep_ok
+                    else P(*lead, None, fsdp, "model"))
+        if name == "w_out" and cfg.n_experts and stacked:
+            if ep_ok and cfg.moe_shard == "expert2d":
+                return P(*lead, "model", "data", None)
+            return (P(*lead, "model", None, fsdp) if ep_ok
+                    else P(*lead, None, "model", fsdp))
+        if name in ("w_gate", "w_in"):
+            return P(*lead, fsdp, "model")
+        if name == "w_out":
+            return P(*lead, "model", fsdp)
+        if name == "b_in":
+            return P(*lead, "model")
+        if name == "in_proj":                    # ssm: DP/FSDP only
+            return P(*lead, fsdp, None)
+        if name == "out_proj":
+            return P(*lead, None, fsdp)
+        return P()                               # norms, biases, A_log, ...
+
+    def fit(spec: P, shape: tuple) -> P:
+        """Drop sharding on dims the axis sizes don't divide evenly
+        (pjit in_shardings require exact divisibility)."""
+        out = []
+        for i, ax in enumerate(spec):
+            if ax is None or i >= len(shape):
+                out.append(None if i >= len(shape) else ax)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = mesh_size(mesh, axes)
+            out.append(ax if shape[i] % size == 0 else None)
+        return P(*out[:len(shape)])
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in tree.items()}
+        return fit(spec_for(prefix[:-1], tree), tree)
+
+    return walk(shapes)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    b = shape.global_batch
+    bspec = dp if (b % max(mesh_size(mesh, dp), 1) == 0 and dp) else None
+    out = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.frontend:
+        out["frontend_embeds"] = P(bspec, None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    """Specs matching transformer.init_cache structure.  Sequence dims
+    shard over "model" (flash-decode style); batch over data axes."""
+    dp = dp_axes(mesh)
+    b = shape.global_batch
+    bspec = dp if (b % max(mesh_size(mesh, dp), 1) == 0 and dp) else None
+    ms = _model_size(mesh)
+    seq_ok = "model" if ms > 1 else None
+    specs: dict = {"pos": P()}
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        specs["k"] = P(None, bspec, seq_ok, None, None)
+        specs["v"] = P(None, bspec, seq_ok, None, None)
+    if cfg.family == "audio":
+        specs["xk"] = P(None, bspec, seq_ok, None, None)
+        specs["xv"] = P(None, bspec, seq_ok, None, None)
+    if cfg.family in ("ssm", "hybrid"):
+        dims = tf.ssm_dims(cfg)
+        h_ok = "model" if dims["n_heads"] % ms == 0 else None
+        specs["h"] = P(None, bspec, h_ok, None, None)
+        specs["conv"] = P(None, bspec, None, None)
+    if cfg.family == "hybrid":
+        specs["ak"] = P(None, bspec, seq_ok, None, None)
+        specs["av"] = P(None, bspec, seq_ok, None, None)
+    return specs
+
+
+def fit_specs(spec_tree, shape_tree, mesh: Mesh):
+    """Drop sharding on any dim the mesh axes don't divide evenly.
+    `shape_tree` leaves: arrays / ShapeDtypeStructs matching spec_tree."""
+    def fit(spec, leaf):
+        shape = leaf.shape
+        out = []
+        for i in range(len(shape)):
+            ax = spec[i] if i < len(spec) else None
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            out.append(ax if shape[i] % mesh_size(mesh, axes) == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        lambda s, l: fit(s, l), spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(p_specs, kind: str):
+    """Optimizer-state spec tree mirroring repro.training.optimizer."""
+    if kind in ("adamw", "sgd"):
+        trees = {"m": p_specs} if kind == "sgd" else {"m": p_specs,
+                                                      "v": p_specs}
+        return {**trees, "count": P()}
+    if kind == "adafactor":
+        def vr(spec):
+            return P(*spec[:-1]) if len(spec) >= 2 else spec
+
+        def vc(spec):
+            return P(*spec[:-2], spec[-1]) if len(spec) >= 2 else P()
+
+        is_spec = lambda x: isinstance(x, P)
+        return {"vr": jax.tree_util.tree_map(vr, p_specs, is_leaf=is_spec),
+                "vc": jax.tree_util.tree_map(vc, p_specs, is_leaf=is_spec),
+                "count": P()}
+    raise ValueError(kind)
+
+
+def named(mesh: Mesh, spec_tree):
+    is_spec = lambda x: isinstance(x, P)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  spec_tree, is_leaf=is_spec)
+
+
+def shard_tree(tree, mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        tree, spec_tree,
+        is_leaf=lambda x: not isinstance(x, dict))

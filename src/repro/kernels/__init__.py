@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper hotspots + pure-jnp oracles."""
+from repro.kernels import ops, ref  # noqa: F401
+
+__all__ = ["ops", "ref"]

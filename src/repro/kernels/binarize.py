@@ -1,0 +1,56 @@
+"""Pallas TPU kernel for feature binarization (paper: BinarizeFloatsNonSse).
+
+The paper's RVV loop broadcasts each border against a vector of feature
+values, compares (vmfgt_vf_f32m4_b8) and mask-adds ones (vadd_vv_u8m1_m),
+accumulating the bin index.  The TPU adaptation tiles a (block_n, block_f)
+sample x feature panel into VMEM and runs the same compare-accumulate over
+the border axis on the 8x128 VPU; the border matrix for the feature panel
+stays VMEM-resident for the whole sample block.
+
+Grid: (N / block_n, F / block_f); borders are padded with +inf so that the
+loop bound is a single static B for every feature.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _binarize_kernel(x_ref, borders_ref, out_ref, *, n_borders: int):
+    x = x_ref[...]                       # (bn, bf) f32
+    borders = borders_ref[...]           # (B, bf)  f32
+
+    def body(b, acc):
+        border_row = jax.lax.dynamic_index_in_dim(borders, b, axis=0,
+                                                  keepdims=True)  # (1, bf)
+        return acc + (x > border_row).astype(jnp.int32)
+
+    acc0 = jnp.zeros(x.shape, dtype=jnp.int32)
+    out_ref[...] = jax.lax.fori_loop(0, n_borders, body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_f", "interpret"))
+def binarize(x: jax.Array, borders: jax.Array, *, block_n: int = 256,
+             block_f: int = 128, interpret: bool = False) -> jax.Array:
+    """bins[n, f] = #{b : x[n, f] > borders[b, f]}  -> (N, F) int32.
+
+    Inputs must be pre-padded: N % block_n == 0, F % block_f == 0 (ops.py
+    handles padding).  Padded border rows must be +inf.
+    """
+    N, F = x.shape
+    B = borders.shape[0]
+    grid = (N // block_n, F // block_f)
+    return pl.pallas_call(
+        functools.partial(_binarize_kernel, n_borders=B),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_f), lambda i, j: (i, j)),
+            pl.BlockSpec((B, block_f), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, F), jnp.int32),
+        interpret=interpret,
+    )(x, borders)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: gradient histogram accumulation for GBDT training.
+
+Training-side hot-spot (the paper optimizes prediction; the framework
+also owns training, whose inner loop is this histogram):
+
+    hist[f, leaf*B + bin] += g[n]   for every sample n, feature f
+
+On CPU/GPU this is a scatter-add; TPU has no fast scatter — the same
+observation as the paper's CalculateLeafValues.  Same cure as well: turn
+the scatter into a one-hot matmul.  For a sample block, build the one-hot
+selector over the combined (leaf, bin) axis and contract over samples on
+the MXU:
+
+    onehot[n, l*B+b] = [seg[n] == l*B+b]           (VPU compare vs iota)
+    hist_f          += onehot^T @ g                (MXU, per feature)
+
+Grid: (F / block_f, N / block_n) with N as the serial reduction axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(bins_ref, leaf_ref, g_ref, out_ref, *, n_bins: int,
+                 n_leaves: int):
+    n_blk = pl.program_id(1)
+    bins = bins_ref[...]                   # (bf, bn) int32 (feature-major)
+    leaf = leaf_ref[...]                   # (1, bn) int32
+    g = g_ref[...]                         # (bn, C) f32
+    bf, bn = bins.shape
+    S = n_leaves * n_bins
+
+    seg = leaf * n_bins + bins                            # (bf, bn)
+    # one-hot over the combined (leaf, bin) axis, batched over features:
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bf, bn, S), 2)
+    onehot = (iota == seg[:, :, None]).astype(jnp.float32)
+    # per-feature MXU contraction over samples: (bf, S, bn) @ (bn, C)
+    acc = jax.lax.dot_general(
+        onehot, g,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bf, S, C)
+
+    @pl.when(n_blk == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(n_blk != 0)
+    def _accum():
+        out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "n_leaves",
+                                             "block_f", "block_n",
+                                             "interpret"))
+def histogram(bins_t: jax.Array, leaf: jax.Array, g: jax.Array, *,
+              n_bins: int, n_leaves: int, block_f: int = 8,
+              block_n: int = 256, interpret: bool = False) -> jax.Array:
+    """bins_t: (F, N) int32 feature-major bins; leaf: (N,) int32;
+    g: (N, C) f32  ->  hist (F, n_leaves*n_bins, C) f32.
+
+    Pre-padded: F % block_f == 0, N % block_n == 0; padded samples must
+    carry g == 0 (they then contribute nothing).
+    """
+    F, N = bins_t.shape
+    C = g.shape[1]
+    S = n_leaves * n_bins
+    grid = (F // block_f, N // block_n)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, n_bins=n_bins, n_leaves=n_leaves),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_f, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n, C), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_f, S, C), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, S, C), jnp.float32),
+        interpret=interpret,
+    )(bins_t, leaf.reshape(1, N), g)
+
+
+def histogram_ref(bins_t: jax.Array, leaf: jax.Array, g: jax.Array, *,
+                  n_bins: int, n_leaves: int) -> jax.Array:
+    """Pure-jnp oracle (the boosting trainer's segment_sum path)."""
+    F, N = bins_t.shape
+    seg = leaf[None, :] * n_bins + bins_t                 # (F, N)
+    return jax.vmap(lambda s: jax.ops.segment_sum(
+        g, s, num_segments=n_leaves * n_bins))(seg)

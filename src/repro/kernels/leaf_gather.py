@@ -1,0 +1,68 @@
+"""Pallas TPU kernel for leaf-value accumulation
+(paper: CalculateLeafValues / CalculateLeafValuesMulti).
+
+This is the hotspot the paper explicitly could NOT vectorize: RVV 0.7.1
+gather/scatter is too slow to pay for the few arithmetic ops per element
+(their Tables 2-3 show speedup 0.98-1.03x).  The TPU answer is to avoid
+the gather unit entirely: `sum_t leaf_values[t, idx[n, t], :]` becomes a
+one-hot matmul `onehot(idx) @ leaf_values` on the 128x128 MXU.  The
+indirect addressing turns into dense systolic compute — the beyond-paper
+optimization recorded in EXPERIMENTS.md SSPerf.
+
+Grid: (N / block_n, T / block_t) with the T axis as a serial reduction;
+the output tile is initialized at t-block 0 and accumulated in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _leaf_gather_kernel(idx_ref, lv_ref, out_ref):
+    t_blk = pl.program_id(1)
+    idx = idx_ref[...]                                 # (bn, bt) int32
+    lv = lv_ref[...]                                   # (bt, L, C) f32
+    bn, bt = idx.shape
+    _, L, C = lv.shape
+
+    # onehot over the flattened (tree, leaf) axis -> one MXU matmul.
+    leaf_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, bt, L), 2)
+    onehot = (leaf_iota == idx[:, :, None]).astype(jnp.float32)
+    onehot = onehot.reshape(bn, bt * L)
+    acc = jax.lax.dot(onehot, lv.reshape(bt * L, C),
+                      preferred_element_type=jnp.float32)   # (bn, C)
+
+    @pl.when(t_blk == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(t_blk != 0)
+    def _accum():
+        out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_t", "interpret"))
+def leaf_gather(idx: jax.Array, leaf_values: jax.Array, *, block_n: int = 128,
+                block_t: int = 16, interpret: bool = False) -> jax.Array:
+    """pred[n, c] = sum_t leaf_values[t, idx[n, t], c]  -> (N, C) float32.
+
+    Pre-padded: N % block_n == 0, T % block_t == 0.  Padded trees must have
+    all-zero leaf_values.
+    """
+    N, T = idx.shape
+    _, L, C = leaf_values.shape
+    grid = (N // block_n, T // block_t)
+    return pl.pallas_call(
+        _leaf_gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_t), lambda i, j: (i, j)),
+            pl.BlockSpec((block_t, L, C), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, C), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, C), jnp.float32),
+        interpret=interpret,
+    )(idx, leaf_values)

@@ -1,0 +1,164 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles shape padding (block-size alignment), backend dispatch (Pallas on
+TPU, interpret=True Pallas or the pure-jnp reference on CPU) and
+un-padding.  This is the only module the rest of the framework imports
+from `repro.kernels`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import binarize as _binarize_k
+from repro.kernels import fused_predict as _fused_k
+from repro.kernels import l2dist as _l2_k
+from repro.kernels import leaf_gather as _gather_k
+from repro.kernels import leaf_index as _index_k
+from repro.kernels import ref as _ref
+
+Backend = Literal["auto", "pallas", "ref"]
+
+# Sentinel bin id guaranteeing `bins < PAD_SPLIT_BIN` (padded trees go left).
+PAD_SPLIT_BIN = 1 << 30
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pad_dim(a: jax.Array, axis: int, target: int, value=0) -> jax.Array:
+    pad = target - a.shape[axis]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _use_pallas(backend: Backend) -> bool:
+    if backend == "pallas":
+        return True
+    if backend == "ref":
+        return False
+    # auto: Pallas on TPU; pure-jnp reference on CPU (interpret mode is a
+    # correctness tool, far too slow for CPU production use).
+    return _on_tpu()
+
+
+# --------------------------------------------------------------------------
+# Public ops
+# --------------------------------------------------------------------------
+def binarize(x: jax.Array, borders: jax.Array, *, backend: Backend = "auto",
+             block_n: int = 256, block_f: int = 128) -> jax.Array:
+    """(N, F) f32, (B, F) f32 -> (N, F) int32 bin indices."""
+    if not _use_pallas(backend):
+        return _ref.binarize(x, borders)
+    N, F = x.shape
+    Np, Fp = _round_up(max(N, 1), block_n), _round_up(max(F, 1), block_f)
+    xp = _pad_dim(_pad_dim(x, 0, Np), 1, Fp)
+    bp = _pad_dim(borders, 1, Fp, value=np.float32(np.inf))
+    out = _binarize_k.binarize(xp, bp, block_n=block_n, block_f=block_f,
+                               interpret=_interpret())
+    return out[:N, :F]
+
+
+def leaf_index(bins: jax.Array, split_features: jax.Array,
+               split_bins: jax.Array, *, backend: Backend = "auto",
+               block_n: int = 256, block_t: int = 16) -> jax.Array:
+    """(N, F) i32, (T, D) i32, (T, D) i32 -> (N, T) int32 leaf ids."""
+    if not _use_pallas(backend):
+        return _ref.leaf_index(bins, split_features, split_bins)
+    N, F = bins.shape
+    T, D = split_features.shape
+    Np, Tp = _round_up(N, block_n), _round_up(T, block_t)
+    Fp = _round_up(F, 128)
+    binsp = _pad_dim(_pad_dim(bins, 0, Np), 1, Fp)
+    sfp = _pad_dim(split_features, 0, Tp)
+    sbp = _pad_dim(split_bins, 0, Tp, value=PAD_SPLIT_BIN)
+    out = _index_k.leaf_index(binsp, sfp, sbp, block_n=block_n,
+                              block_t=block_t, interpret=_interpret())
+    return out[:N, :T]
+
+
+def leaf_gather(idx: jax.Array, leaf_values: jax.Array, *,
+                backend: Backend = "auto", block_n: int = 128,
+                block_t: int = 16) -> jax.Array:
+    """(N, T) i32, (T, L, C) f32 -> (N, C) f32 summed leaf values."""
+    if not _use_pallas(backend):
+        return _ref.leaf_gather(idx, leaf_values)
+    N, T = idx.shape
+    _, L, C = leaf_values.shape
+    Np, Tp = _round_up(N, block_n), _round_up(T, block_t)
+    idxp = _pad_dim(_pad_dim(idx, 0, Np), 1, Tp)
+    lvp = _pad_dim(leaf_values, 0, Tp)    # zero leaves: padded trees no-op
+    out = _gather_k.leaf_gather(idxp, lvp, block_n=block_n, block_t=block_t,
+                                interpret=_interpret())
+    return out[:N]
+
+
+def l2sq_rowwise(q: jax.Array, refs: jax.Array, *, backend: Backend = "auto",
+                 block_n: int = 256, block_k: int = 128) -> jax.Array:
+    """(K,), (N, K) -> (N,) squared L2 distances."""
+    if not _use_pallas(backend):
+        return _ref.l2sq_rowwise(q, refs)
+    N, K = refs.shape
+    Np, Kp = _round_up(N, block_n), _round_up(K, block_k)
+    qp = _pad_dim(q, 0, Kp)
+    rp = _pad_dim(_pad_dim(refs, 0, Np), 1, Kp)
+    out = _l2_k.l2sq_rowwise(qp, rp, block_n=block_n, block_k=block_k,
+                             interpret=_interpret())
+    return out[:N]
+
+
+def l2sq_matrix(a: jax.Array, b: jax.Array, *, backend: Backend = "auto",
+                block_m: int = 128, block_n: int = 128,
+                block_k: int = 128) -> jax.Array:
+    """(M, K), (N, K) -> (M, N) squared L2 distance matrix."""
+    if not _use_pallas(backend):
+        return _ref.l2sq_matrix(a, b)
+    M, K = a.shape
+    N, _ = b.shape
+    Mp, Np_, Kp = (_round_up(M, block_m), _round_up(N, block_n),
+                   _round_up(K, block_k))
+    ap = _pad_dim(_pad_dim(a, 0, Mp), 1, Kp)
+    bp = _pad_dim(_pad_dim(b, 0, Np_), 1, Kp)
+    out = _l2_k.l2sq_matrix(ap, bp, block_m=block_m, block_n=block_n,
+                            block_k=block_k, interpret=_interpret())
+    return out[:M, :N]
+
+
+def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
+                  split_bins: jax.Array, leaf_values: jax.Array, *,
+                  backend: Backend = "auto", block_n: int = 128,
+                  block_t: int = 16) -> jax.Array:
+    """Fused binarize+index+gather -> (N, C) f32."""
+    if not _use_pallas(backend):
+        return _ref.fused_predict(x, borders, split_features, split_bins,
+                                  leaf_values)
+    N, F = x.shape
+    T, D = split_features.shape
+    _, L, C = leaf_values.shape
+    Np = _round_up(N, block_n)
+    Tp = _round_up(T, block_t)
+    Fp = _round_up(F, 128)
+    xp = _pad_dim(_pad_dim(x, 0, Np), 1, Fp)
+    bp = _pad_dim(borders, 1, Fp, value=np.float32(np.inf))
+    sfp = _pad_dim(split_features, 0, Tp)
+    sbp = _pad_dim(split_bins, 0, Tp, value=PAD_SPLIT_BIN)
+    lvp = _pad_dim(leaf_values, 0, Tp)
+    out = _fused_k.fused_predict(xp, bp, sfp, sbp, lvp, block_n=block_n,
+                                 block_t=block_t, interpret=_interpret())
+    return out[:N]

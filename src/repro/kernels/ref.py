@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground-truth implementations of the paper's four hotspots
+(BinarizeFloatsNonSse, CalcIndexesBasic, CalculateLeafValues[Multi],
+L2SqrDistance) plus the beyond-paper fused predict.  Each Pallas kernel is
+validated against the function of the same name here (tests/test_kernels*.py).
+
+Conventions (match CatBoost's oblivious-tree model):
+  x              (N, F)  float32   raw feature matrix
+  borders        (B, F)  float32   per-feature bin borders, padded with +inf
+  bins           (N, F)  int32     binarized features: #borders strictly below x
+  split_features (T, D)  int32     feature id used at depth d of tree t
+  split_bins     (T, D)  int32     border id; go right iff bins[f] >= split_bin
+  leaf_values    (T, 2^D, C) float32
+  leaf index     idx[n, t] = sum_d  2^d * [ bins[n, sf[t,d]] >= sb[t,d] ]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def binarize(x: jax.Array, borders: jax.Array) -> jax.Array:
+    """bins[n, f] = #{b : x[n, f] > borders[b, f]}  (CatBoost: value > border)."""
+    # (N, 1, F) > (1, B, F) -> sum over B
+    return jnp.sum(x[:, None, :] > borders[None, :, :], axis=1, dtype=jnp.int32)
+
+
+def leaf_index(bins: jax.Array, split_features: jax.Array,
+               split_bins: jax.Array) -> jax.Array:
+    """idx[n, t] = sum_d 2^d * [bins[n, sf[t, d]] >= sb[t, d]]  -> (N, T) int32."""
+    T, D = split_features.shape
+    gathered = bins[:, split_features.reshape(-1)].reshape(bins.shape[0], T, D)
+    go_right = (gathered >= split_bins[None, :, :]).astype(jnp.int32)
+    pow2 = (1 << jnp.arange(D, dtype=jnp.int32))[None, None, :]
+    return jnp.sum(go_right * pow2, axis=-1, dtype=jnp.int32)
+
+
+def leaf_gather(idx: jax.Array, leaf_values: jax.Array) -> jax.Array:
+    """pred[n, c] = sum_t leaf_values[t, idx[n, t], c]  -> (N, C) float32."""
+    N, T = idx.shape
+    _, L, C = leaf_values.shape
+    taken = jnp.take_along_axis(
+        leaf_values[None, :, :, :],                        # (1, T, L, C)
+        idx[:, :, None, None].astype(jnp.int32),           # (N, T, 1, 1)
+        axis=2,
+    )                                                      # (N, T, 1, C)
+    return jnp.sum(taken[:, :, 0, :], axis=1)
+
+
+def l2sq_rowwise(q: jax.Array, refs: jax.Array) -> jax.Array:
+    """Paper-faithful L2SqrDistance: one query vs many refs -> (N,) float32."""
+    d = refs - q[None, :]
+    return jnp.sum(d * d, axis=-1)
+
+
+def l2sq_matrix(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Full pairwise distance matrix (M, N): ||a||^2 + ||b||^2 - 2 a.b^T."""
+    a_sq = jnp.sum(a * a, axis=-1)[:, None]
+    b_sq = jnp.sum(b * b, axis=-1)[None, :]
+    cross = a @ b.T
+    return jnp.maximum(a_sq + b_sq - 2.0 * cross, 0.0)
+
+
+def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
+                  split_bins: jax.Array, leaf_values: jax.Array) -> jax.Array:
+    """binarize -> leaf_index -> leaf_gather in one logical op  -> (N, C)."""
+    bins = binarize(x, borders)
+    idx = leaf_index(bins, split_features, split_bins)
+    return leaf_gather(idx, leaf_values)

@@ -1,0 +1,91 @@
+"""Kernel block-shape tuning support.
+
+RVV 0.7.1 exposes LMUL (m1/m2/m4/m8) register grouping; the paper notes
+picking the best mode "requires experiments".  The TPU analog is the
+Pallas BlockSpec shape: it sets the VMEM working set and the MXU/VPU
+tile utilization.  This module provides the VMEM footprint model used to
+pre-filter candidate block shapes (anything over the budget would spill)
+and the candidate grids the benchmark sweeps.
+
+On real TPU hardware `sweep()` would time each candidate; on CPU the
+interpret-mode result is correctness-only, so the selector falls back to
+the analytic footprint/alignment score.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+VMEM_BUDGET = 96 * 1024 * 1024   # bytes; leave headroom of v5e's 128 MiB
+LANE = 128                        # VPU lane width / MXU tile edge
+SUBLANE = 8
+
+
+def _align_score(*dims: int) -> float:
+    """Fraction of hardware tile actually used (penalizes ragged tiles)."""
+    score = 1.0
+    for d in dims[:-1]:
+        score *= min(1.0, d / (SUBLANE * ((d + SUBLANE - 1) // SUBLANE)))
+    d = dims[-1]
+    score *= min(1.0, d / (LANE * ((d + LANE - 1) // LANE)))
+    return score
+
+
+def binarize_footprint(block_n: int, block_f: int, n_borders: int) -> int:
+    x = block_n * block_f * 4
+    borders = n_borders * block_f * 4
+    out = block_n * block_f * 4
+    return x + borders + out
+
+
+def leaf_index_footprint(block_n: int, block_t: int, F: int, D: int) -> int:
+    bins = block_n * F * 4
+    onehot = block_t * D * F * 4
+    gathered = block_t * D * block_n * 4
+    out = block_n * block_t * 4
+    return bins + onehot + gathered + out
+
+
+def leaf_gather_footprint(block_n: int, block_t: int, L: int, C: int) -> int:
+    idx = block_n * block_t * 4
+    lv = block_t * L * C * 4
+    onehot = block_n * block_t * L * 4
+    out = block_n * C * 4
+    return idx + lv + onehot + out
+
+
+def fused_footprint(block_n: int, block_t: int, F: int, D: int, L: int,
+                    C: int, n_borders: int) -> int:
+    return (binarize_footprint(block_n, F, n_borders)
+            + leaf_index_footprint(block_n, block_t, F, D)
+            + leaf_gather_footprint(block_n, block_t, L, C))
+
+
+@dataclasses.dataclass
+class Candidate:
+    block_n: int
+    block_t: int
+    footprint: int
+    score: float
+
+
+def candidates_fused(F: int, D: int, L: int, C: int, n_borders: int,
+                     budget: int = VMEM_BUDGET) -> list[Candidate]:
+    out = []
+    for bn in (64, 128, 256, 512, 1024):
+        for bt in (8, 16, 32, 64):
+            fp = fused_footprint(bn, bt, F, D, L, C, n_borders)
+            if fp > budget:
+                continue
+            # prefer larger tiles (fewer grid steps) once aligned
+            score = _align_score(bn, LANE) * min(1.0, fp / budget + 0.2) \
+                * (bn * bt) ** 0.25
+            out.append(Candidate(bn, bt, fp, score))
+    return sorted(out, key=lambda c: -c.score)
+
+
+def best_fused_blocks(F: int, D: int, L: int, C: int,
+                      n_borders: int) -> tuple[int, int]:
+    cands = candidates_fused(F, D, L, C, n_borders)
+    if not cands:
+        return 128, 16
+    return cands[0].block_n, cands[0].block_t

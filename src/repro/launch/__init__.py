@@ -1,0 +1,7 @@
+"""Launch layer: meshes, dry-run, roofline report, train/serve CLIs.
+
+NOTE: do NOT import repro.launch.dryrun from here — it sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 at import time and
+must only be imported by the dry-run entrypoint itself.
+"""
+from repro.launch import mesh  # noqa: F401

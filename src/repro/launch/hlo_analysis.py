@@ -1,0 +1,45 @@
+"""HLO post-processing: collective byte accounting + hardware model.
+
+Kept import-side-effect-free (dryrun.py sets XLA_FLAGS at import; this
+module is safe for tests and the roofline report).
+"""
+from __future__ import annotations
+
+import re
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s ICI
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\b")
+_SHAPE_RE = re.compile(r"\b(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Sum result-operand bytes of every collective op in optimized HLO."""
+    per_kind: dict[str, float] = {}
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = _COLL_RE.search(s)
+        if not m or "=" not in s:
+            continue
+        kind = m.group(1)
+        lhs = s.split("=", 1)[1]
+        op_pos = lhs.find(m.group(0))
+        shapes = _SHAPE_RE.findall(lhs[:op_pos])
+        nbytes = 0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+    per_kind["total"] = sum(per_kind.values())
+    return per_kind

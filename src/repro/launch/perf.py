@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""SSPerf hillclimbing driver.
+
+Runs named optimization variants on the three chosen cells, re-lowers,
+re-derives the roofline terms, and records hypothesis -> change ->
+before -> after per variant into results/perf/.
+
+  python -m repro.launch.perf --cell kimi-train [--variant expert2d]
+  python -m repro.launch.perf --all
+"""
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "perf"
+
+# (variant name, cfg overrides, hypothesis text)
+CELLS = {
+    "kimi-train": {
+        "arch": "kimi-k2-1t-a32b", "shape": "train_4k",
+        "variants": [
+            ("baseline", {},
+             "paper-faithful baseline: EP(model) + FSDP(data) experts"),
+            ("expert2d", {"moe_shard": "expert2d"},
+             "FSDP all-gathers ~2 GB of expert weights per layer per step;"
+             " sharding d_ff over 'data' (weights fully sharded, never"
+             " gathered) trades them for smaller activation reshards:"
+             " expect collective bytes to drop several x"),
+            ("no-remat", {"remat": False},
+             "remat recomputes the fwd pass inside bwd: expect ~25% fewer"
+             " FLOPs and fewer memory ops, at higher live-activation"
+             " memory (temp bytes up)"),
+            ("remat-dots", {"remat_policy": "dots"},
+             "middle ground: save matmul outputs, recompute elementwise"
+             " only - expect most of no-remat's byte win while keeping"
+             " live activations bounded (no-remat's 28GB/dev activations"
+             " do not fit v5e HBM; this should)"),
+            ("moe-group-4096", {"moe_group_size": 4096},
+             "larger routing groups -> fewer groups x bigger capacity"
+             " slack: slightly fewer dispatch ops, bigger slot buffers;"
+             " expect small memory-term change, informative either way"),
+        ],
+    },
+    "internvl2-prefill": {
+        "arch": "internvl2-1b", "shape": "prefill_32k",
+        "variants": [
+            ("baseline", {},
+             "paper-faithful baseline: q-chunked attention, chunk=1024"),
+            ("chunk-4096", {"attn_chunk": 4096},
+             "14 heads don't shard on the 16-way model axis, so every"
+             " device re-runs full attention; bigger q-chunks amortize"
+             " per-chunk mask/softmax overheads and intermediate"
+             " materialization: expect memory term down"),
+            ("chunk-512", {"attn_chunk": 512},
+             "counter-probe: smaller chunks shrink live buffers but add"
+             " per-chunk overhead ops; expect memory term UP (confirms"
+             " the chunk-size direction)"),
+            ("no-remat", {"remat": False},
+             "prefill is inference: remat buys nothing (no bwd) but the"
+             " policy still wraps the scan body; expect fewer bytes"),
+            ("ring-attention", {"attention_impl": "ring"},
+             "the correct sequence-parallel attention: Q/K/V sharded on S"
+             " over 'model', KV blocks ppermute around the ring with an"
+             " online softmax. Each shard computes S/16 of the queries -"
+             " the 16x GSPMD replication disappears: expect compute AND"
+             " memory terms down ~an order of magnitude"),
+            ("seq-parallel", {"sequence_parallel": True},
+             "diagnosis: 14 heads cannot shard the 16-way model axis, so"
+             " GSPMD REPLICATES the whole forward on every model shard"
+             " (useful-FLOPs ratio 0.01 = ~16x redundancy + attention)."
+             " Sequence parallelism shards the 32k sequence over 'model'"
+             " between blocks: expect compute and memory terms to drop"
+             " up to ~16x (attention still gathers around the block)"),
+        ],
+    },
+    "internlm2-decode": {
+        "arch": "internlm2-20b", "shape": "decode_32k",
+        "variants": [
+            ("baseline", {},
+             "paper-faithful baseline: plain decode attention; XLA"
+             " all-gathers the seq-sharded KV cache every layer"),
+            ("flash-decode", {"flash_decode": True},
+             "beyond-paper: shard_map flash-decode computes partial"
+             " softmax per KV shard and combines via LSE psum - the"
+             " 32k-token KV all-gather disappears; expect collective"
+             " bytes down >10x and memory term down (no gathered-KV"
+             " materialization). Mirrors the paper's lesson inverted:"
+             " keep data where it lives, move the tiny reduction"),
+        ],
+    },
+}
+
+
+def run(cell: str, only_variant: str | None = None, force: bool = False):
+    from repro.launch import dryrun
+    spec = CELLS[cell]
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = []
+    for name, overrides, hypothesis in spec["variants"]:
+        if only_variant and name != only_variant:
+            continue
+        path = RESULTS / f"{cell}__{name}.json"
+        if path.exists() and not force:
+            out.append(json.loads(path.read_text()))
+            continue
+        try:
+            res = dryrun.analyze_cell(spec["arch"], spec["shape"],
+                                      multi_pod=False,
+                                      cfg_overrides=overrides)
+        except Exception as e:   # record failures too: refuted != broken
+            import traceback
+            res = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        res["variant"] = name
+        res["hypothesis"] = hypothesis
+        res["overrides"] = overrides
+        path.write_text(json.dumps(res, indent=1, default=str))
+        out.append(res)
+        if res.get("status") == "ok":
+            print(f"{cell:20s} {name:16s} comp={res['compute_s']:.3g}s "
+                  f"mem={res['memory_s']:.3g}s coll={res['collective_s']:.3g}s"
+                  f" dom={res['dominant']}", flush=True)
+        else:
+            print(f"{cell:20s} {name:16s} ERROR {res.get('error','')[:120]}",
+                  flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS))
+    ap.add_argument("--variant")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    cells = list(CELLS) if args.all or not args.cell else [args.cell]
+    for c in cells:
+        run(c, args.variant, args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Serving launcher: GBDT batched scoring or LM generation.
+
+  python -m repro.launch.serve --mode gbdt     # batched GBDT requests
+  python -m repro.launch.serve --mode lm --arch glm4-9b
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def serve_gbdt(args):
+    from repro.core import boosting, losses
+    from repro.core.boosting import BoostingParams
+    from repro.data import synthetic
+    from repro.serving.engine import GBDTServer
+
+    ds = synthetic.load(args.dataset, scale=args.scale)
+    loss = losses.make_loss(ds.loss, n_classes=max(ds.n_classes, 2),
+                            group_index=ds.group_index_train)
+    ens, _ = boosting.fit(ds.x_train, ds.y_train, loss=loss,
+                          params=BoostingParams(
+                              n_trees=args.trees, depth=ds.params.depth,
+                              learning_rate=0.1))
+    server = GBDTServer(ens, max_batch=args.batch)
+    t0 = time.perf_counter()
+    n = 200
+    for i in range(n):
+        server.predict(ds.x_test[i % len(ds.x_test)])
+    dt = time.perf_counter() - t0
+    print(f"[serve:gbdt] {n} sequential requests in {dt:.2f}s; "
+          f"batches={len(server.batcher.batch_sizes)}")
+    server.close()
+
+
+def serve_lm(args):
+    import jax
+    from repro import configs
+    from repro.models import transformer as tf
+    from repro.serving.engine import LMServer
+
+    cfg = configs.get(args.arch, smoke=True)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0), max_positions=256)
+    server = LMServer(cfg, params, max_seq=128 + (
+        cfg.frontend_seq if cfg.family == "vlm" else 0))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32)
+    fe = (np.zeros((2, cfg.frontend_seq, cfg.d_model), np.float32)
+          if cfg.frontend else None)
+    t0 = time.perf_counter()
+    out = server.generate(toks, n_new=16, frontend_embeds=fe)
+    dt = time.perf_counter() - t0
+    print(f"[serve:lm] {cfg.name} generated {out.shape} tokens "
+          f"in {dt:.2f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["gbdt", "lm"], default="gbdt")
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--dataset", default="santander")
+    ap.add_argument("--scale", type=float, default=0.004)
+    ap.add_argument("--trees", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=128)
+    args = ap.parse_args()
+    (serve_gbdt if args.mode == "gbdt" else serve_lm)(args)
+
+
+if __name__ == "__main__":
+    main()

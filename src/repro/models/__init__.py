@@ -1,0 +1,2 @@
+"""Model substrate: unified LM stack for the 10 assigned architectures."""
+from repro.models import layers, moe, ssm, steps, transformer  # noqa: F401

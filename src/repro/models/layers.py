@@ -1,0 +1,174 @@
+"""Shared LM building blocks: norms, RoPE, attention (GQA/SWA/chunked),
+MLPs.  Pure functions over explicit parameter pytrees; dtype policy is
+(param_dtype storage, compute in bf16 by default, fp32 softmax/norm).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (B, S, H, Dh), positions: (B, S) or (S,)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)            # (half,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]                       # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:2 * half].astype(
+        jnp.float32)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    if x.shape[-1] > 2 * half:                              # odd tail passes
+        rot = jnp.concatenate([rot, x[..., 2 * half:].astype(jnp.float32)],
+                              axis=-1)
+    return rot.astype(dt)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / half)
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+def _attend_block(q, k, v, mask):
+    """q: (B, Sq, KVH, G, Dh); k/v: (B, Sk, KVH, Dh); mask: (Sq, Sk) or None.
+
+    fp32 softmax, bf16 matmuls.
+    """
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _mask(sq: int, sk: int, q_off, *, causal: bool, window: int):
+    """(sq, sk) boolean mask. q position = q_off + row."""
+    qpos = q_off + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              q_chunk: int = 0, unroll: bool = False) -> jax.Array:
+    """GQA attention.  q: (B, S, H, Dh), k/v: (B, S, KVH, Dh).
+
+    `q_chunk > 0` enables row-blocked (flash-style) execution: exact
+    softmax per query block, O(S * q_chunk) score memory instead of
+    O(S^2) — required for the 32k prefill shapes.
+    """
+    B, S, H, Dh = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, S, KVH, G, Dh)
+
+    if q_chunk and S > q_chunk and S % q_chunk == 0:
+        nc = S // q_chunk
+
+        def body(carry, qc):
+            qblk, off = qc
+            m = (_mask(q_chunk, k.shape[1], off, causal=causal,
+                       window=window) if (causal or window) else None)
+            return carry, _attend_block(qblk, k, v, m)
+
+        q_chunks = qg.reshape(B, nc, q_chunk, KVH, G, Dh).transpose(
+            1, 0, 2, 3, 4, 5)
+        offs = jnp.arange(nc) * q_chunk
+        _, outs = jax.lax.scan(body, None, (q_chunks, offs), unroll=unroll)
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KVH, G, Dh)
+    else:
+        m = _mask(S, S, 0, causal=causal, window=window) if (
+            causal or window) else None
+        out = _attend_block(qg, k, v, m)
+    return out.reshape(B, S, H, Dh)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cur_pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """One-token attention over a (possibly longer-than-valid) KV cache.
+
+    q: (B, 1, H, Dh); caches: (B, S, KVH, Dh); cur_pos: scalar int32 —
+    number of valid cache positions (the new token's k/v already written).
+    """
+    B, _, H, Dh = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, 1, KVH, G, Dh)
+    scale = Dh ** -0.5
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(S)[None, None, None, None, :]
+    valid = kpos < cur_pos
+    if window > 0:
+        valid = valid & (kpos > cur_pos - 1 - window)
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v_cache.dtype),
+                     v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def swiglu(x: jax.Array, w_gate: jax.Array, w_in: jax.Array,
+           w_out: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_in)
+    return h @ w_out
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+             w_out: jax.Array, b_out: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w_in + b_in, approximate=True) @ w_out + b_out

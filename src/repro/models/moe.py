@@ -1,0 +1,96 @@
+"""Mixture-of-Experts FFN with gather/scatter dispatch (no one-hot matmul
+dispatch: slot indices are built with a scatter and tokens move via gather,
+so dispatch costs memory bandwidth, not MXU FLOPs — the same lesson as the
+paper's CalculateLeafValues: keep the matrix engine for useful math).
+
+Token-choice top-k routing with per-group capacity (drops overflow, like
+Switch/GShard).  Expert weights carry a leading E axis that shards over
+the "model" mesh axis when n_experts divides it (EP, e.g. kimi 384/16);
+otherwise d_ff shards instead (TP-in-expert, e.g. mixtral E=8 < 16) — the
+choice is a config flag consumed by distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jax.Array          # load-balance loss (Switch-style)
+    drop_frac: jax.Array         # fraction of selections dropped
+
+
+def moe_ffn(x: jax.Array, router_w: jax.Array, w_gate: jax.Array,
+            w_in: jax.Array, w_out: jax.Array, *, top_k: int,
+            group_size: int = 1024, capacity_factor: float = 1.25
+            ) -> tuple[jax.Array, MoEMetrics]:
+    """x: (T, D) tokens -> (T, D).  Experts: w_* have leading E axis.
+
+    Pipeline: route -> sort-free slotting (scatter slot table) ->
+    gather-dispatch -> grouped expert matmuls -> gather-combine.
+    """
+    T, D = x.shape
+    E, _, F = w_gate.shape
+    k = top_k
+    G = max(1, T // group_size)
+    S = T // G                                           # tokens per group
+    C = max(k, int(S * k / E * capacity_factor))         # capacity per group
+
+    xg = x.reshape(G, S, D)
+    logits = (xg.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)              # (G, S, E)
+    top_p, top_e = jax.lax.top_k(probs, k)               # (G, S, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each selection within its expert queue (per group):
+    # rank via cumsum over the flattened (S*k) selection order.
+    sel_onehot = jax.nn.one_hot(top_e.reshape(G, S * k), E,
+                                dtype=jnp.int32)         # (G, S*k, E)
+    pos = jnp.cumsum(sel_onehot, axis=1) - sel_onehot    # selections before
+    pos = jnp.take_along_axis(
+        pos, top_e.reshape(G, S * k, 1), axis=2)[..., 0]  # (G, S*k)
+    pos = pos.reshape(G, S, k)
+    keep = pos < C                                       # (G, S, k) bool
+
+    # Slot table: slot = e*C + pos; dropped selections target a trash slot.
+    slot = jnp.where(keep, top_e * C + pos, E * C)       # (G, S, k)
+    src_token = jnp.broadcast_to(jnp.arange(S)[None, :, None],
+                                 (G, S, k)).astype(jnp.int32)
+    # Scatter token ids into the slot table (one extra trash slot).
+    table = jnp.zeros((G, E * C + 1), jnp.int32)
+    table = jax.vmap(lambda t, s, v: t.at[s.reshape(-1)].set(
+        v.reshape(-1)))(table, slot, src_token)          # (G, E*C+1)
+    src = table[:, :E * C]                               # (G, E*C)
+
+    # Dispatch: gather token rows -> (G, E, C, D).
+    xe = jnp.take_along_axis(xg, src[:, :, None], axis=1)
+    xe = xe.reshape(G, E, C, D)
+
+    # Expert FFN: grouped matmuls (contraction per expert) on the MXU.
+    h = jnp.einsum("gecd,edf->gecf", xe, w_gate,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("gecd,edf->gecf", xe, w_in,
+                   preferred_element_type=jnp.float32)
+    act = (jax.nn.silu(h) * u).astype(x.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", act, w_out,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # Combine: gather each selection's slot output, weight, sum over k.
+    ye_flat = ye.reshape(G, E * C, D)
+    ye_flat = jnp.concatenate(
+        [ye_flat, jnp.zeros((G, 1, D), ye.dtype)], axis=1)  # trash slot
+    sel = jnp.take_along_axis(ye_flat, slot.reshape(G, S * k)[:, :, None],
+                              axis=1).reshape(G, S, k, D)
+    w = (top_p * keep).astype(x.dtype)                   # (G, S, k)
+    y = jnp.einsum("gskd,gsk->gsd", sel, w)
+
+    # Switch load-balance aux loss: E * sum_e f_e * p_e.
+    frac_sel = jnp.mean(
+        jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(0, 1, 2))
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_sel * mean_p)
+    drop = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y.reshape(T, D), MoEMetrics(aux, drop)

@@ -1,0 +1,215 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan formulation.
+
+Implements the SSD algorithm from arXiv:2405.21060: the sequence is split
+into chunks; within a chunk the recurrence is computed as a (masked,
+decay-weighted) quadratic attention-like product; across chunks a small
+associative scan carries the (H, P, N) state.  On TPU both the intra-chunk
+einsums and the chunk-state contraction are MXU work, and the inter-chunk
+scan touches only O(S/Q) state tensors.
+
+Decode is the pure recurrence: h <- exp(dt*A) h + dt * (x outer B);
+y = h . C — O(1) per token, which is why mamba2/zamba2 are the archs that
+run the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+class SSMParams(NamedTuple):
+    in_proj: jax.Array      # (D, 2*d_inner + 2*N + H)
+    conv_w: jax.Array       # (W, conv_dim)  depthwise, conv_dim=d_inner+2N
+    conv_b: jax.Array       # (conv_dim,)
+    A_log: jax.Array        # (H,)
+    D_skip: jax.Array       # (H,)
+    dt_bias: jax.Array      # (H,)
+    norm_scale: jax.Array   # (d_inner,)
+    out_proj: jax.Array     # (d_inner, D)
+
+
+def ssm_dims(d_model: int, *, expand: int = 2, headdim: int = 64,
+             d_state: int = 64, conv_width: int = 4):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_dim = d_inner + 2 * d_state
+    return dict(d_inner=d_inner, n_heads=n_heads, headdim=headdim,
+                d_state=d_state, conv_dim=conv_dim, conv_width=conv_width)
+
+
+def init_ssm_params(key, d_model: int, dims: dict, dtype=jnp.float32
+                    ) -> SSMParams:
+    d_inner, H = dims["d_inner"], dims["n_heads"]
+    N, W, conv_dim = dims["d_state"], dims["conv_width"], dims["conv_dim"]
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * N + H
+    return SSMParams(
+        in_proj=(jax.random.normal(ks[0], (d_model, proj_out)) * 0.02
+                 ).astype(dtype),
+        conv_w=(jax.random.normal(ks[1], (W, conv_dim)) * 0.2).astype(dtype),
+        conv_b=jnp.zeros((conv_dim,), dtype),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        D_skip=jnp.ones((H,), dtype),
+        dt_bias=jnp.full((H,), -1.0, dtype),
+        norm_scale=jnp.ones((d_inner,), dtype),
+        out_proj=(jax.random.normal(ks[2], (d_inner, d_model)) * 0.02
+                  ).astype(dtype),
+    )
+
+
+def _depthwise_causal_conv(x: jax.Array, w: jax.Array, b: jax.Array
+                           ) -> jax.Array:
+    """x: (B, S, C), w: (W, C). Causal depthwise conv, silu activation."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _split_proj(zxbcdt, dims):
+    d_inner, N, H = dims["d_inner"], dims["d_state"], dims["n_heads"]
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N:]
+    return z, xBC, dt
+
+
+def ssd_forward(params: SSMParams, u: jax.Array, dims: dict, *,
+                chunk: int = 64, return_cache: bool = False,
+                unroll: bool = False):
+    """u: (B, S, D) -> (B, S, D) [, final SSMCache for decode handoff].
+
+    S is padded up to a multiple of `chunk` internally (causal, so the
+    tail padding never influences real positions)."""
+    B, S0, D = u.shape
+    if S0 % chunk:
+        pad = chunk - S0 % chunk
+        out = ssd_forward(params, jnp.pad(u, ((0, 0), (0, pad), (0, 0))),
+                          dims, chunk=chunk, return_cache=False,
+                          unroll=unroll)
+        # NOTE: return_cache with padding would hand back a state advanced
+        # past S0; callers needing the cache must pass chunk-aligned S.
+        assert not return_cache, "return_cache requires S % chunk == 0"
+        return out[:, :S0, :]
+    S = S0
+    d_inner, H, P = dims["d_inner"], dims["n_heads"], dims["headdim"]
+    N = dims["d_state"]
+    W = dims["conv_width"]
+
+    zxbcdt = u @ params.in_proj
+    z, xBC, dt = _split_proj(zxbcdt, dims)
+    xBC_raw = xBC                                          # pre-conv tail
+    xBC = _depthwise_causal_conv(xBC, params.conv_w, params.conv_b)
+    x = xBC[..., :d_inner].reshape(B, S, H, P)
+    Bm = xBC[..., d_inner:d_inner + N]                     # (B, S, N)
+    Cm = xBC[..., d_inner + N:]                            # (B, S, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params.dt_bias.astype(jnp.float32))  # (B, S, H)
+    A = -jnp.exp(params.A_log.astype(jnp.float32))         # (H,)
+    dA = dt * A[None, None, :]                             # (B, S, H) <= 0
+
+    nc = S // chunk
+    Q = chunk
+    xc = x.reshape(B, nc, Q, H, P)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+    dtc = dt.reshape(B, nc, Q, H)
+    dAc = dA.reshape(B, nc, Q, H)
+    cs = jnp.cumsum(dAc, axis=2)                           # (B, nc, Q, H)
+
+    # ---- intra-chunk (quadratic, attention-like) ----
+    CB = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc,
+                    preferred_element_type=jnp.float32)    # (B, nc, Q, Q)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    delta = cs[:, :, :, None, :] - cs[:, :, None, :, :]
+    # mask BEFORE exp: the upper triangle has delta > 0 (cs decreasing),
+    # exp would overflow and poison the gradient through jnp.where
+    decay = jnp.exp(jnp.where(tri, delta, -jnp.inf))
+    att = CB[:, :, :, :, None] * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", att.astype(x.dtype), xc,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk states ----
+    last = cs[:, :, -1:, :]                                 # (B, nc, 1, H)
+    w_state = jnp.exp(last - cs) * dtc                      # (B, nc, Q, H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                        Bc.astype(jnp.float32), w_state,
+                        xc.astype(jnp.float32))             # (B,nc,H,N,P)
+
+    # ---- inter-chunk scan ----
+    chunk_decay = jnp.exp(last[:, :, 0, :])                 # (B, nc, H)
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    sc_states = jnp.moveaxis(states, 1, 0)                  # (nc, B, H, N, P)
+    sc_decay = jnp.moveaxis(chunk_decay, 1, 0)              # (nc, B, H)
+    h_final, h_prev = jax.lax.scan(scan_fn, h0, (sc_states, sc_decay),
+                                   unroll=unroll)
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                     # (B, nc, H, N, P)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc.astype(jnp.float32), jnp.exp(cs), h_prev)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + params.D_skip[None, None, :, None].astype(jnp.float32) \
+        * x.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params.norm_scale)
+    out = y @ params.out_proj
+    if return_cache:
+        conv_tail = xBC_raw[:, S - (W - 1):, :]
+        return out, SSMCache(h=h_final, conv=conv_tail)
+    return out
+
+
+class SSMCache(NamedTuple):
+    h: jax.Array          # (B, H, N, P) float32
+    conv: jax.Array       # (B, W-1, conv_dim)
+
+
+def init_ssm_cache(batch: int, dims: dict, dtype=jnp.float32) -> SSMCache:
+    H, N, P = dims["n_heads"], dims["d_state"], dims["headdim"]
+    W, conv_dim = dims["conv_width"], dims["conv_dim"]
+    return SSMCache(h=jnp.zeros((batch, H, N, P), jnp.float32),
+                    conv=jnp.zeros((batch, W - 1, conv_dim), dtype))
+
+
+def ssd_decode_step(params: SSMParams, u: jax.Array, cache: SSMCache,
+                    dims: dict) -> tuple[jax.Array, SSMCache]:
+    """u: (B, 1, D) one token -> (B, 1, D), updated cache."""
+    B = u.shape[0]
+    d_inner, H, P = dims["d_inner"], dims["n_heads"], dims["headdim"]
+    N, W = dims["d_state"], dims["conv_width"]
+
+    zxbcdt = u[:, 0, :] @ params.in_proj                    # (B, total)
+    z, xBC, dt = _split_proj(zxbcdt, dims)
+    conv_in = jnp.concatenate([cache.conv, xBC[:, None, :]], axis=1)
+    conv_out = jnp.sum(conv_in * params.conv_w[None, :, :], axis=1) \
+        + params.conv_b[None, :]
+    xBC = jax.nn.silu(conv_out)                             # (B, conv_dim)
+    x = xBC[:, :d_inner].reshape(B, H, P)
+    Bm = xBC[:, d_inner:d_inner + N]
+    Cm = xBC[:, d_inner + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params.dt_bias.astype(jnp.float32))   # (B, H)
+    A = -jnp.exp(params.A_log.astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])                           # (B, H)
+
+    hx = cache.h * dA[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bm.astype(jnp.float32), dt, x.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), hx)
+    y = y + params.D_skip[None, :, None].astype(jnp.float32) \
+        * x.astype(jnp.float32)
+    y = y.reshape(B, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params.norm_scale)
+    out = (y @ params.out_proj)[:, None, :]
+    return out, SSMCache(h=hx, conv=conv_in[:, 1:, :])

@@ -1,0 +1,78 @@
+"""Step functions: train_step / prefill_step / decode_step factories.
+
+These are the functions the launcher jits with explicit in/out shardings
+and the dry-run lowers against ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+AUX_WEIGHT = 0.01     # MoE load-balance loss weight
+
+
+def token_loss(cfg: ModelConfig, logits: jax.Array, labels: jax.Array
+               ) -> jax.Array:
+    """Mean next-token cross entropy; logits (B, S, V) fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, mesh=None
+            ) -> tuple[jax.Array, dict]:
+    logits, aux = tf.forward(cfg, params, batch, mesh=mesh)
+    ce = token_loss(cfg, logits, batch["labels"])
+    total = ce + AUX_WEIGHT * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, optimizer, mesh=None) -> Callable:
+    """Returns fn(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    `optimizer` follows the repro.training.optimizer interface
+    (init/update); gradient all-reduce across data axes is implicit in the
+    pjit sharding (GSPMD inserts the collectives).
+    """
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, mesh=mesh),
+            has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                        params, updates)
+        gnorm = optimizer.global_norm(grads)
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, parts = loss_fn(cfg, params, batch)
+        return {"loss": loss, **parts}
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int,
+                      mesh=None) -> Callable:
+    def prefill_step(params, batch):
+        return tf.prefill(cfg, params, batch, max_seq, mesh=mesh)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None) -> Callable:
+    def decode_step(params, cache, tokens):
+        return tf.decode_step(cfg, params, cache, tokens, mesh=mesh)
+    return decode_step

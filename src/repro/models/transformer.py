@@ -1,0 +1,730 @@
+"""Unified model assembly for all 10 assigned architectures.
+
+One parameter-pytree + pure-function design:
+  init_params(cfg, key)          real arrays (smoke tests / examples)
+  abstract_params(cfg)           ShapeDtypeStructs (dry-run, no allocation)
+  forward(cfg, params, batch)    logits for training/prefill
+  init_cache / prefill / decode  serving path with KV / SSM caches
+
+Families: dense (internlm2/glm4/stablelm/granite), moe (kimi/mixtral),
+ssm (mamba2), hybrid (zamba2: mamba + shared attention block every k
+layers), vlm (internvl2: stub patch embeddings + decoder LM), audio
+(whisper: stub frame embeddings + enc-dec).
+
+Layer stacks are `lax.scan` over stacked parameters (bounded HLO size for
+88-layer / 1T-param lowering) with optional remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as ll
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+
+Params = dict
+Cache = dict
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def _cast_params(cfg: ModelConfig, params: Params) -> Params:
+    """Mixed precision: compute in cfg.compute_dtype (grads flow through
+    the cast back to the fp32 master params)."""
+    cdt = _dtype(cfg.compute_dtype)
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(cdt)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+
+
+# ==========================================================================
+# Parameter construction
+# ==========================================================================
+def _attn_shapes(cfg: ModelConfig, stacked: int | None):
+    hd = cfg.resolved_head_dim
+    lead = (stacked,) if stacked else ()
+    return {
+        "attn_norm": lead + (cfg.d_model,),
+        "wq": lead + (cfg.d_model, cfg.n_heads * hd),
+        "wk": lead + (cfg.d_model, cfg.n_kv_heads * hd),
+        "wv": lead + (cfg.d_model, cfg.n_kv_heads * hd),
+        "wo": lead + (cfg.n_heads * hd, cfg.d_model),
+    }
+
+
+def _mlp_shapes(cfg: ModelConfig, stacked: int | None):
+    lead = (stacked,) if stacked else ()
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.n_experts:
+        E = cfg.n_experts
+        return {
+            "mlp_norm": lead + (D,),
+            "router": lead + (D, E),
+            "w_gate": lead + (E, D, F),
+            "w_in": lead + (E, D, F),
+            "w_out": lead + (E, F, D),
+        }
+    if cfg.mlp == "swiglu":
+        return {"mlp_norm": lead + (D,), "w_gate": lead + (D, F),
+                "w_in": lead + (D, F), "w_out": lead + (F, D)}
+    return {"mlp_norm": lead + (D,), "w_in": lead + (D, F),
+            "b_in": lead + (F,), "w_out": lead + (F, D),
+            "b_out": lead + (D,)}
+
+
+def _ssm_shapes(cfg: ModelConfig, stacked: int):
+    dims = ssm_dims(cfg)
+    L = stacked
+    return {
+        "norm": (L, cfg.d_model),
+        "in_proj": (L, cfg.d_model, 2 * dims["d_inner"]
+                    + 2 * dims["d_state"] + dims["n_heads"]),
+        "conv_w": (L, dims["conv_width"], dims["conv_dim"]),
+        "conv_b": (L, dims["conv_dim"]),
+        "A_log": (L, dims["n_heads"]),
+        "D_skip": (L, dims["n_heads"]),
+        "dt_bias": (L, dims["n_heads"]),
+        "norm_scale": (L, dims["d_inner"]),
+        "out_proj": (L, dims["d_inner"], cfg.d_model),
+    }
+
+
+def ssm_dims(cfg: ModelConfig) -> dict:
+    return ssm_lib.ssm_dims(cfg.d_model, expand=cfg.ssm_expand,
+                            headdim=cfg.ssm_headdim, d_state=cfg.ssm_state)
+
+
+def _eff_chunk(cfg: ModelConfig, S: int) -> int:
+    """SSD chunk size: grows with S so the inter-chunk scan stays <= 128
+    steps (bounds both scan latency and unrolled-probe HLO size)."""
+    c = cfg.ssm_chunk
+    while S > 128 * c and S % (2 * c) == 0:
+        c *= 2
+    return c
+
+
+def param_shapes(cfg: ModelConfig, *, max_positions: int = 0) -> dict:
+    """Nested dict of shapes for the whole model."""
+    D, V, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    tree: dict = {"embed": (V, D), "final_norm": (D,)}
+    if cfg.norm == "layernorm":
+        tree["final_norm_bias"] = (D,)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = (D, V)
+    if cfg.learned_positions:
+        tree["pos_embed"] = (max(max_positions, 2048), D)
+
+    if cfg.family in ("dense", "vlm"):
+        tree["blocks"] = {**_attn_shapes(cfg, L), **_mlp_shapes(cfg, L)}
+    elif cfg.family == "moe":
+        tree["blocks"] = {**_attn_shapes(cfg, L), **_mlp_shapes(cfg, L)}
+    elif cfg.family == "ssm":
+        tree["blocks"] = _ssm_shapes(cfg, L)
+    elif cfg.family == "hybrid":
+        tree["blocks"] = _ssm_shapes(cfg, L)
+        shared = {**_attn_shapes(cfg, None),
+                  "mlp_norm": (D,), "w_gate": (D, cfg.d_ff),
+                  "w_in": (D, cfg.d_ff), "w_out": (cfg.d_ff, D)}
+        tree["shared_attn"] = shared
+    elif cfg.family == "audio":
+        enc: dict = {**_attn_shapes(cfg, cfg.encoder_layers),
+                     **_mlp_shapes(cfg, cfg.encoder_layers)}
+        dec: dict = {**_attn_shapes(cfg, L), **_mlp_shapes(cfg, L)}
+        for k, v in _attn_shapes(cfg, L).items():
+            dec["x_" + k] = v
+        tree["enc_blocks"] = enc
+        tree["dec_blocks"] = dec
+        tree["enc_final_norm"] = (D,)
+        if cfg.norm == "layernorm":
+            tree["enc_final_norm_bias"] = (D,)
+    else:
+        raise ValueError(cfg.family)
+    return tree
+
+
+def _init_leaf(key, path: str, shape, dtype):
+    if not shape or path.endswith(("norm", "norm_scale", "D_skip", "scale")):
+        return jnp.ones(shape, dtype)
+    if path.endswith(("_bias", "b_in", "b_out", "conv_b")):
+        return jnp.zeros(shape, dtype)
+    if path.endswith("A_log"):
+        H = shape[-1]
+        base = jnp.log(jnp.linspace(1.0, 16.0, H))
+        return jnp.broadcast_to(base, shape).astype(dtype)
+    if path.endswith("dt_bias"):
+        return jnp.full(shape, -1.0, dtype)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = min(0.02, fan_in ** -0.5)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key, *, max_positions: int = 0) -> Params:
+    shapes = param_shapes(cfg, max_positions=max_positions)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(shapes,
+                                                           is_leaf=lambda x:
+                                                           isinstance(x, tuple))
+    dtype = _dtype(cfg.param_dtype)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, (path, shape) in zip(keys, leaves):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        out.append(_init_leaf(k, name, shape, dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(cfg: ModelConfig, *, max_positions: int = 0) -> Params:
+    shapes = param_shapes(cfg, max_positions=max_positions)
+    dtype = _dtype(cfg.param_dtype)
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s, dtype), shapes,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ==========================================================================
+# Blocks
+# ==========================================================================
+def _norm(cfg, x, scale, bias=None):
+    if cfg.norm == "layernorm":
+        return ll.layer_norm(x, scale, bias if bias is not None
+                             else jnp.zeros_like(scale))
+    return ll.rms_norm(x, scale)
+
+
+def _attn_block(cfg: ModelConfig, x, p, positions, *, causal=True,
+                kv_override=None, mesh=None):
+    """Pre-norm attention. kv_override=(k, v) for cross-attention."""
+    hd = cfg.resolved_head_dim
+    B, S, _ = x.shape
+    h = _norm(cfg, x, p["attn_norm"])
+    q = (h @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    if kv_override is None:
+        k = (h @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+        v = (h @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+        if not cfg.learned_positions:
+            q = ll.apply_rope(q, positions, cfg.rope_theta)
+            k = ll.apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+    use_ring = (cfg.attention_impl == "ring" and mesh is not None
+                and "model" in mesh.axis_names
+                and kv_override is None and causal
+                and not cfg.sliding_window
+                and S % mesh.shape["model"] == 0)
+    if use_ring:
+        from repro.distributed import collectives, sharding as shd
+        dp = shd.dp_axes(mesh)
+        bspec = dp if (B % max(shd.mesh_size(mesh, dp), 1) == 0 and dp)             else None
+        out = collectives.ring_attention(
+            mesh, dp=bspec, unroll=cfg.scan_unroll)(q, k, v)
+    else:
+        q_chunk = cfg.attn_chunk if S > cfg.attn_chunk_threshold else 0
+        out = ll.attention(q, k, v, causal=causal and kv_override is None,
+                           window=cfg.sliding_window, q_chunk=q_chunk,
+                           unroll=cfg.scan_unroll)
+    return x + out.reshape(B, S, -1) @ p["wo"]
+
+
+def _mlp_block(cfg: ModelConfig, x, p):
+    h = _norm(cfg, x, p["mlp_norm"])
+    if cfg.n_experts:
+        B, S, D = h.shape
+        y, metrics = moe_lib.moe_ffn(
+            h.reshape(B * S, D), p["router"], p["w_gate"], p["w_in"],
+            p["w_out"], top_k=cfg.experts_per_token,
+            group_size=cfg.moe_group_size,
+            capacity_factor=cfg.moe_capacity_factor)
+        return x + y.reshape(B, S, D), metrics.aux_loss
+    if cfg.mlp == "swiglu":
+        return x + ll.swiglu(h, p["w_gate"], p["w_in"], p["w_out"]), 0.0
+    return x + ll.gelu_mlp(h, p["w_in"], p["b_in"], p["w_out"],
+                           p["b_out"]), 0.0
+
+
+def _ssm_params(p, idx=None) -> ssm_lib.SSMParams:
+    fields = ["in_proj", "conv_w", "conv_b", "A_log", "D_skip", "dt_bias",
+              "norm_scale", "out_proj"]
+    vals = [p[f] if idx is None else p[f][idx] for f in fields]
+    return ssm_lib.SSMParams(*vals)
+
+
+# ==========================================================================
+# Forward (training / prefill body)
+# ==========================================================================
+def _sp(cfg, mesh, x):
+    """Sequence-parallel constraint: shard S over 'model' between blocks."""
+    if not (cfg.sequence_parallel and mesh is not None
+            and "model" in mesh.axis_names):
+        return x
+    if x.shape[1] % mesh.shape["model"]:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(None, "model", None)))
+
+
+def _scan_blocks(cfg, x, blocks, body, mesh=None):
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+
+    def step(carry, p):
+        y, aux = body(carry[0], p)
+        return (_sp(cfg, mesh, y), carry[1] + aux), None
+
+    (x, aux), _ = jax.lax.scan(step, (_sp(cfg, mesh, x), 0.0), blocks,
+                               unroll=cfg.scan_unroll)
+    return x, aux
+
+
+def _decoder_stack(cfg: ModelConfig, x, params, positions, mesh=None):
+    """dense / moe / vlm decoder-only stack."""
+    def body(h, p):
+        h = _attn_block(cfg, h, p, positions, mesh=mesh)
+        h, aux = _mlp_block(cfg, h, p)
+        return h, aux
+    return _scan_blocks(cfg, x, params["blocks"], body, mesh=mesh)
+
+
+def _ssm_stack(cfg: ModelConfig, x, blocks):
+    dims = ssm_dims(cfg)
+
+    def body(h, p):
+        hn = ll.rms_norm(h, p["norm"])
+        return h + ssm_lib.ssd_forward(_ssm_params(p), hn, dims,
+                                       chunk=_eff_chunk(cfg, hn.shape[1]),
+                                       unroll=cfg.scan_unroll), 0.0
+    return _scan_blocks(cfg, x, blocks, body)
+
+
+def _hybrid_stack(cfg: ModelConfig, x, params, positions):
+    """zamba2: mamba stack with a SHARED attention block every k layers."""
+    k = cfg.attn_every
+    L = cfg.n_layers
+    shared = params["shared_attn"]
+    blocks = params["blocks"]
+    aux = 0.0
+    start = 0
+    while start < L:
+        stop = min(start + k, L)
+        seg = jax.tree_util.tree_map(lambda a: a[start:stop], blocks)
+        x, a = _ssm_stack(cfg, x, seg)
+        aux += a
+        if stop < L or stop % k == 0:
+            x = _attn_block(cfg, x, shared, positions)
+            x, _ = _mlp_block(cfg, x, shared)
+        start = stop
+    return x, aux
+
+
+def _whisper_encode(cfg: ModelConfig, params, frames):
+    """frames: (B, S_f, D) stub conv-frontend output."""
+    x = frames.astype(_dtype(cfg.compute_dtype))
+    x = x + ll.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def body(h, p):
+        h = _attn_block(cfg, h, p, None, causal=False)
+        h, aux = _mlp_block(cfg, h, p)
+        return h, aux
+
+    x, _ = _scan_blocks(cfg, x, params["enc_blocks"], body)
+    return _norm(cfg, x, params["enc_final_norm"],
+                 params.get("enc_final_norm_bias"))
+
+
+def _whisper_decode_stack(cfg: ModelConfig, x, params, enc_out, positions):
+    hd = cfg.resolved_head_dim
+    B, Se, _ = enc_out.shape
+
+    def body(h, p):
+        h = _attn_block(cfg, h, p, positions)
+        # cross-attention: kv from encoder output
+        xp = {k[2:]: v for k, v in p.items() if k.startswith("x_")}
+        enc_h = enc_out
+        xk = (enc_h @ xp["wk"]).reshape(B, Se, cfg.n_kv_heads, hd)
+        xv = (enc_h @ xp["wv"]).reshape(B, Se, cfg.n_kv_heads, hd)
+        h = _attn_block(cfg, h, xp, None, kv_override=(xk, xv))
+        h, aux = _mlp_block(cfg, h, p)
+        return h, aux
+
+    return _scan_blocks(cfg, x, params["dec_blocks"], body)
+
+
+def _embed_tokens(cfg, params, tokens, positions):
+    x = params["embed"][tokens].astype(_dtype(cfg.compute_dtype))
+    if cfg.learned_positions:
+        pos = positions if positions is not None else jnp.arange(
+            tokens.shape[1])
+        x = x + params["pos_embed"][pos].astype(x.dtype)
+    return x
+
+
+def _logits(cfg, params, x):
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def forward(cfg: ModelConfig, params: Params, batch: dict,
+            mesh=None) -> tuple:
+    """Training/prefill forward -> (logits, aux_loss).
+
+    batch: tokens (B, S) [+ frontend_embeds (B, S_f, D) for vlm/audio].
+    """
+    params = _cast_params(cfg, params)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+
+    if cfg.family == "audio":
+        enc_out = _whisper_encode(cfg, params, batch["frontend_embeds"])
+        x = _embed_tokens(cfg, params, tokens, positions[0])
+        x, aux = _whisper_decode_stack(cfg, x, params, enc_out, positions)
+    elif cfg.family == "vlm":
+        x_txt = _embed_tokens(cfg, params, tokens, None)
+        x_img = batch["frontend_embeds"].astype(x_txt.dtype)
+        x = jnp.concatenate([x_img, x_txt], axis=1)
+        positions = jnp.arange(x.shape[1])[None, :].astype(jnp.int32)
+        x, aux = _decoder_stack(cfg, x, params, positions, mesh=mesh)
+        x = x[:, x_img.shape[1]:, :]                    # text positions only
+    elif cfg.family == "ssm":
+        x = _embed_tokens(cfg, params, tokens, None)
+        x, aux = _ssm_stack(cfg, x, params["blocks"])
+    elif cfg.family == "hybrid":
+        x = _embed_tokens(cfg, params, tokens, None)
+        x, aux = _hybrid_stack(cfg, x, params, positions)
+    else:
+        x = _embed_tokens(cfg, params, tokens, None)
+        x, aux = _decoder_stack(cfg, x, params, positions, mesh=mesh)
+
+    x = _norm(cfg, x, params["final_norm"], params.get("final_norm_bias"))
+    return _logits(cfg, params, x), aux
+
+
+# ==========================================================================
+# Serving: caches, prefill, decode
+# ==========================================================================
+def hybrid_n_apps(cfg: ModelConfig) -> int:
+    """Number of shared-attention applications in the hybrid schedule."""
+    n, start = 0, 0
+    while start < cfg.n_layers:
+        stop = min(start + cfg.attn_every, cfg.n_layers)
+        if stop < cfg.n_layers or stop % cfg.attn_every == 0:
+            n += 1
+        start = stop
+    return n
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               abstract: bool = False) -> Cache:
+    hd = cfg.resolved_head_dim
+    cdt = _dtype(cfg.compute_dtype)
+    mk = (jax.ShapeDtypeStruct if abstract
+          else (lambda s, d: jnp.zeros(s, d)))
+    cache: Cache = {"pos": mk((), jnp.int32)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = min(max_seq, cfg.sliding_window) if cfg.sliding_window \
+            else max_seq
+        cache["k"] = mk((cfg.n_layers, batch, kv, cfg.n_kv_heads, hd), cdt)
+        cache["v"] = mk((cfg.n_layers, batch, kv, cfg.n_kv_heads, hd), cdt)
+    elif cfg.family == "audio":
+        cache["k"] = mk((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd),
+                        cdt)
+        cache["v"] = mk((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd),
+                        cdt)
+        cache["xk"] = mk((cfg.n_layers, batch, cfg.frontend_seq,
+                          cfg.n_kv_heads, hd), cdt)
+        cache["xv"] = mk((cfg.n_layers, batch, cfg.frontend_seq,
+                          cfg.n_kv_heads, hd), cdt)
+    if cfg.family in ("ssm", "hybrid"):
+        dims = ssm_dims(cfg)
+        cache["h"] = mk((cfg.n_layers, batch, dims["n_heads"],
+                         dims["d_state"], dims["headdim"]), jnp.float32)
+        cache["conv"] = mk((cfg.n_layers, batch, dims["conv_width"] - 1,
+                            dims["conv_dim"]), cdt)
+    if cfg.family == "hybrid":
+        n_apps = hybrid_n_apps(cfg)
+        cache["ak"] = mk((n_apps, batch, max_seq, cfg.n_kv_heads, hd), cdt)
+        cache["av"] = mk((n_apps, batch, max_seq, cfg.n_kv_heads, hd), cdt)
+    return cache
+
+
+def _decode_attn_block(cfg, x, p, kc, vc, pos, mesh=None):
+    """One-token attention with cache update. x: (B, 1, D)."""
+    hd = cfg.resolved_head_dim
+    B = x.shape[0]
+    S = kc.shape[1]
+    h = _norm(cfg, x, p["attn_norm"])
+    q = (h @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    k = (h @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = (h @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    if not cfg.learned_positions:
+        pvec = jnp.full((B, 1), pos, jnp.int32)
+        q = ll.apply_rope(q, pvec, cfg.rope_theta)
+        k = ll.apply_rope(k, pvec, cfg.rope_theta)
+    # SWA: ring-buffer write; full: linear write.
+    slot = (pos % S) if cfg.sliding_window else jnp.minimum(pos, S - 1)
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                      (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                      (0, slot, 0, 0))
+    valid = jnp.minimum(pos + 1, S) if cfg.sliding_window else pos + 1
+    if cfg.flash_decode and mesh is not None:
+        from repro.distributed import collectives, sharding as shd
+        dp = shd.dp_axes(mesh)
+        bspec = dp if (B % max(shd.mesh_size(mesh, dp), 1) == 0 and dp) \
+            else None
+        fd = collectives.flash_decode(mesh, dp=bspec)
+        out = fd(q[:, 0], kc, vc, valid)[:, None]
+    else:
+        out = ll.decode_attention(q, kc, vc, valid)
+    return x + out.reshape(B, 1, -1) @ p["wo"], kc, vc
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
+                tokens: jax.Array, *, mesh=None) -> tuple[jax.Array, Cache]:
+    """tokens: (B, 1) -> (logits (B, 1, V), updated cache)."""
+    params = _cast_params(cfg, params)
+    pos = cache["pos"]
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(_dtype(cfg.compute_dtype))
+    if cfg.learned_positions:
+        x = x + params["pos_embed"][pos][None, None, :].astype(x.dtype)
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, inp):
+            p, kc, vc = inp
+            h, kc, vc = _decode_attn_block(cfg, h, p, kc, vc, pos,
+                                           mesh=mesh)
+            h, aux = _mlp_block(cfg, h, p)
+            return h, (kc, vc)
+
+        def step(carry, inp):
+            h, _ = carry
+            h, kv = body(h, inp)
+            return (h, 0.0), kv
+
+        (x, _), (nk, nv) = jax.lax.scan(
+            step, (x, 0.0), (params["blocks"], cache["k"], cache["v"]),
+            unroll=cfg.scan_unroll)
+        new_cache.update(k=nk, v=nv)
+
+    elif cfg.family == "ssm":
+        dims = ssm_dims(cfg)
+
+        def step(h, inp):
+            p, hc, cc = inp
+            hn = ll.rms_norm(h, p["norm"])
+            y, c2 = ssm_lib.ssd_decode_step(
+                _ssm_params(p), hn, ssm_lib.SSMCache(hc, cc), dims)
+            return h + y, (c2.h, c2.conv)
+
+        x, (nh, nconv) = jax.lax.scan(
+            step, x, (params["blocks"], cache["h"], cache["conv"]),
+            unroll=cfg.scan_unroll)
+        new_cache.update(h=nh, conv=nconv)
+
+    elif cfg.family == "hybrid":
+        dims = ssm_dims(cfg)
+        k_every = cfg.attn_every
+        L = cfg.n_layers
+        shared = params["shared_attn"]
+        nh, nconv = [], []
+        nak, nav = [], []
+        app = 0
+        start = 0
+        while start < L:
+            stop = min(start + k_every, L)
+            for i in range(start, stop):
+                p = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+                hn = ll.rms_norm(x, p["norm"])
+                y, c2 = ssm_lib.ssd_decode_step(
+                    _ssm_params(p), hn,
+                    ssm_lib.SSMCache(cache["h"][i], cache["conv"][i]), dims)
+                x = x + y
+                nh.append(c2.h)
+                nconv.append(c2.conv)
+            if stop < L or stop % k_every == 0:
+                x, kc, vc = _decode_attn_block(
+                    cfg, x, shared, cache["ak"][app], cache["av"][app],
+                    pos, mesh=mesh)
+                x, _ = _mlp_block(cfg, x, shared)
+                nak.append(kc)
+                nav.append(vc)
+                app += 1
+            start = stop
+        new_cache.update(h=jnp.stack(nh), conv=jnp.stack(nconv),
+                         ak=jnp.stack(nak), av=jnp.stack(nav))
+
+    elif cfg.family == "audio":
+        def step(carry, inp):
+            h = carry
+            p, kc, vc, xk, xv = inp
+            h, kc, vc = _decode_attn_block(cfg, h, p, kc, vc, pos,
+                                           mesh=mesh)
+            xp = {k[2:]: v for k, v in p.items() if k.startswith("x_")}
+            hq = _norm(cfg, h, xp["attn_norm"])
+            hd_ = cfg.resolved_head_dim
+            q = (hq @ xp["wq"]).reshape(B, 1, cfg.n_heads, hd_)
+            out = ll.decode_attention(q, xk, xv, xk.shape[1])
+            h = h + out.reshape(B, 1, -1) @ xp["wo"]
+            h, _ = _mlp_block(cfg, h, p)
+            return h, (kc, vc)
+
+        x, (nk, nv) = jax.lax.scan(
+            step, x, (params["dec_blocks"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]), unroll=cfg.scan_unroll)
+        new_cache.update(k=nk, v=nv)
+
+    new_cache["pos"] = pos + 1
+    x = _norm(cfg, x, params["final_norm"], params.get("final_norm_bias"))
+    return _logits(cfg, params, x), new_cache
+
+
+def _prefill_kv(cfg, hn, p, positions, B, S):
+    hd = cfg.resolved_head_dim
+    k = (hn @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (hn @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if not cfg.learned_positions:
+        k = ll.apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _store_kv(cache_k, ks, S):
+    """Write stacked (L, B, S, KVH, hd) prefill k/v into the cache."""
+    kv_len = cache_k.shape[2]
+    if kv_len >= S:
+        return jax.lax.dynamic_update_slice(
+            cache_k, ks.astype(cache_k.dtype), (0, 0, 0, 0, 0))
+    return ks[:, :, S - kv_len:, :, :].astype(cache_k.dtype)  # SWA tail
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: dict,
+            max_seq: int, mesh=None) -> tuple[jax.Array, Cache]:
+    """Full-sequence forward filling the serving cache.
+
+    Returns (last-position logits, cache).  For vlm, batch carries
+    frontend_embeds prepended to the token sequence (total length must be
+    <= max_seq); for audio, frontend_embeds feed the encoder and the
+    cross-attention KV is precomputed here.
+    """
+    params = _cast_params(cfg, params)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_seq)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.family == "vlm":
+            x_txt = _embed_tokens(cfg, params, tokens, None)
+            x_img = batch["frontend_embeds"].astype(x_txt.dtype)
+            x = jnp.concatenate([x_img, x_txt], axis=1)
+        else:
+            x = _embed_tokens(cfg, params, tokens,
+                              jnp.arange(S).astype(jnp.int32))
+        St = x.shape[1]
+        positions = jnp.arange(St)[None, :].astype(jnp.int32)
+
+        def step(h, p):
+            hn = _norm(cfg, h, p["attn_norm"])
+            k, v = _prefill_kv(cfg, hn, p, positions, B, St)
+            h = _attn_block(cfg, h, p, positions, mesh=mesh)
+            h, _ = _mlp_block(cfg, h, p)
+            return _sp(cfg, mesh, h), (k, v)
+
+        x, (ks, vs) = jax.lax.scan(step, _sp(cfg, mesh, x),
+                                   params["blocks"],
+                                   unroll=cfg.scan_unroll)
+        cache["k"] = _store_kv(cache["k"], ks, St)
+        cache["v"] = _store_kv(cache["v"], vs, St)
+        cache["pos"] = jnp.asarray(St, jnp.int32)
+
+    elif cfg.family == "ssm":
+        x = _embed_tokens(cfg, params, tokens, None)
+        dims = ssm_dims(cfg)
+
+        def step(h, p):
+            hn = ll.rms_norm(h, p["norm"])
+            y, c = ssm_lib.ssd_forward(_ssm_params(p), hn, dims,
+                                       chunk=_eff_chunk(cfg, hn.shape[1]),
+                                       return_cache=True,
+                                       unroll=cfg.scan_unroll)
+            return h + y, (c.h, c.conv)
+
+        x, (hs, convs) = jax.lax.scan(step, x, params["blocks"],
+                                      unroll=cfg.scan_unroll)
+        cache["h"], cache["conv"] = hs, convs
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+
+    elif cfg.family == "hybrid":
+        x = _embed_tokens(cfg, params, tokens, None)
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+        dims = ssm_dims(cfg)
+        shared = params["shared_attn"]
+        hs, convs, aks, avs = [], [], [], []
+        start = 0
+        while start < cfg.n_layers:
+            stop = min(start + cfg.attn_every, cfg.n_layers)
+            for i in range(start, stop):
+                p = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+                hn = ll.rms_norm(x, p["norm"])
+                y, c = ssm_lib.ssd_forward(_ssm_params(p), hn, dims,
+                                           chunk=_eff_chunk(cfg, hn.shape[1]),
+                                           return_cache=True,
+                                           unroll=cfg.scan_unroll)
+                x = x + y
+                hs.append(c.h)
+                convs.append(c.conv)
+            if stop < cfg.n_layers or stop % cfg.attn_every == 0:
+                hn = _norm(cfg, x, shared["attn_norm"])
+                k, v = _prefill_kv(cfg, hn, shared, positions, B, S)
+                aks.append(k)
+                avs.append(v)
+                x = _attn_block(cfg, x, shared, positions)
+                x, _ = _mlp_block(cfg, x, shared)
+            start = stop
+        cache["h"], cache["conv"] = jnp.stack(hs), jnp.stack(convs)
+        cache["ak"] = _store_kv(cache["ak"], jnp.stack(aks), S)
+        cache["av"] = _store_kv(cache["av"], jnp.stack(avs), S)
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+
+    elif cfg.family == "audio":
+        enc_out = _whisper_encode(cfg, params, batch["frontend_embeds"])
+        hd = cfg.resolved_head_dim
+        Se = enc_out.shape[1]
+        x = _embed_tokens(cfg, params, tokens,
+                          jnp.arange(S).astype(jnp.int32))
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+
+        def step(h, p):
+            hn = _norm(cfg, h, p["attn_norm"])
+            k, v = _prefill_kv(cfg, hn, p, positions, B, S)
+            h = _attn_block(cfg, h, p, positions)
+            xp = {kk[2:]: vv for kk, vv in p.items() if kk.startswith("x_")}
+            xk = (enc_out @ xp["wk"]).reshape(B, Se, cfg.n_kv_heads, hd)
+            xv = (enc_out @ xp["wv"]).reshape(B, Se, cfg.n_kv_heads, hd)
+            h = _attn_block(cfg, h, xp, None, kv_override=(xk, xv))
+            h, _ = _mlp_block(cfg, h, p)
+            return h, (k, v, xk, xv)
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(step, x, params["dec_blocks"],
+                                             unroll=cfg.scan_unroll)
+        cache["k"] = _store_kv(cache["k"], ks, S)
+        cache["v"] = _store_kv(cache["v"], vs, S)
+        cache["xk"], cache["xv"] = (xks.astype(cache["xk"].dtype),
+                                    xvs.astype(cache["xv"].dtype))
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+    else:
+        raise ValueError(cfg.family)
+
+    x = _norm(cfg, x, params["final_norm"], params.get("final_norm_bias"))
+    logits = _logits(cfg, params, x[:, -1:, :])
+    return logits, cache

@@ -1,0 +1,2 @@
+"""Serving substrate: request batching + GBDT/LM engines."""
+from repro.serving import engine  # noqa: F401

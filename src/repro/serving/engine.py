@@ -1,0 +1,155 @@
+"""Serving engines — the paper's use case is batched prediction (its
+Table 5 speedups exist only when samples arrive in batches; single-sample
+inference gains nothing from vectorization, as the paper notes in its
+limitations).  The batcher aggregates requests into vector-width batches.
+
+* GBDTServer: batched oblivious-tree scoring with the vectorized predict
+  pipeline; optional device-mesh sharding.
+* EmbeddingGBDTPipeline: the paper's image-embeddings workload as a
+  production pattern — backbone embeddings -> KNN features -> GBDT head
+  (any of the 10 assigned LM backbones can produce the embeddings).
+* LMServer: prefill/decode serving for the assigned architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import knn, predict
+from repro.core.trees import ObliviousEnsemble
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    payload: np.ndarray
+    future: "queue.Queue"
+
+
+class Batcher:
+    """Deadline-or-size request batching (max_batch or max_wait_ms)."""
+
+    def __init__(self, serve_fn: Callable[[np.ndarray], np.ndarray], *,
+                 max_batch: int = 256, max_wait_ms: float = 2.0):
+        self.serve_fn = serve_fn
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self.q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self.batch_sizes: list[int] = []
+        self.thread = threading.Thread(target=self._loop, daemon=True)
+        self.thread.start()
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                first: Request = self.q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            deadline = time.perf_counter() + self.max_wait
+            while len(batch) < self.max_batch:
+                left = deadline - time.perf_counter()
+                if left <= 0:
+                    break
+                try:
+                    batch.append(self.q.get(timeout=left))
+                except queue.Empty:
+                    break
+            xs = np.stack([r.payload for r in batch])
+            self.batch_sizes.append(len(batch))
+            ys = np.asarray(self.serve_fn(xs))
+            for r, y in zip(batch, ys):
+                r.future.put(y)
+
+    def submit(self, rid: int, payload: np.ndarray) -> "queue.Queue":
+        fut: queue.Queue = queue.Queue(maxsize=1)
+        self.q.put(Request(rid, payload, fut))
+        return fut
+
+    def close(self):
+        self._stop.set()
+        self.thread.join(timeout=2)
+
+
+class GBDTServer:
+    def __init__(self, ensemble: ObliviousEnsemble, *,
+                 mesh=None, max_batch: int = 256,
+                 max_wait_ms: float = 2.0):
+        self.ensemble = ensemble
+        self.mesh = mesh
+        self._jit = jax.jit(lambda x: predict.predict_proba(
+            self.ensemble, x, strategy="staged", backend="ref"))
+
+        def serve(xs: np.ndarray) -> np.ndarray:
+            x = jnp.asarray(xs, jnp.float32)
+            if self.mesh is not None:
+                raw = predict.predict_sharded(self.ensemble, x, self.mesh)
+                return np.asarray(jax.nn.softmax(raw, axis=-1))
+            return np.asarray(self._jit(x))
+
+        self.batcher = Batcher(serve, max_batch=max_batch,
+                               max_wait_ms=max_wait_ms)
+
+    def predict(self, x: np.ndarray, timeout: float = 30.0) -> np.ndarray:
+        fut = self.batcher.submit(0, np.asarray(x, np.float32))
+        return fut.get(timeout=timeout)
+
+    def close(self):
+        self.batcher.close()
+
+
+class EmbeddingGBDTPipeline:
+    """backbone embeddings -> KNN features -> GBDT (paper's
+    image-embeddings workload, generalized to any backbone)."""
+
+    def __init__(self, featurizer: knn.KNNFeaturizer,
+                 ensemble: ObliviousEnsemble,
+                 embed_fn: Optional[Callable] = None):
+        self.featurizer = featurizer
+        self.ensemble = ensemble
+        self.embed_fn = embed_fn          # raw input -> embedding (stub ok)
+
+    def predict(self, inputs: np.ndarray) -> np.ndarray:
+        emb = (self.embed_fn(inputs) if self.embed_fn is not None
+               else jnp.asarray(inputs))
+        feats = self.featurizer.transform(emb)
+        x = jnp.concatenate([emb, feats], axis=1)
+        return np.asarray(predict.predict_class(self.ensemble, x,
+                                                backend="ref"))
+
+
+class LMServer:
+    """Minimal continuous-batching LM server: prefill then step decode."""
+
+    def __init__(self, cfg, params, *, max_seq: int = 512):
+        import functools
+        from repro.models import transformer as tf
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self._prefill = jax.jit(functools.partial(tf.prefill, cfg,
+                                                  max_seq=max_seq))
+        self._decode = jax.jit(functools.partial(tf.decode_step, cfg))
+
+    def generate(self, tokens: np.ndarray, n_new: int,
+                 frontend_embeds: Optional[np.ndarray] = None
+                 ) -> np.ndarray:
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if frontend_embeds is not None:
+            batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
+        logits, cache = self._prefill(self.params, batch)
+        out = []
+        tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+        for _ in range(n_new):
+            out.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,138 @@
+"""Fault-tolerant checkpointing.
+
+Design (DESIGN.md SS5):
+  * atomic two-phase commit: write into `step_N.tmp/`, fsync, os.replace
+    to `step_N/` — a crash mid-save never corrupts the latest checkpoint
+  * mesh-agnostic layout: leaves are stored as full logical numpy arrays
+    + a manifest of the pytree structure, so a checkpoint written on a
+    16x16 mesh restores onto 8x8 (elastic scaling) or a single host
+  * async save: the host copy happens on the caller thread (cheap), the
+    serialization + rename on a background thread
+  * retention: keep_last prunes old steps, latest() enables auto-resume
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}{k}."))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    tree: dict = {}
+    for key, val in flat.items():
+        parts = key.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | pathlib.Path, *, keep_last: int = 3,
+                 async_save: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save --------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
+        self.wait()                      # one in-flight save at a time
+        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+
+        def work():
+            try:
+                tmp = self.dir / f"step_{step:09d}.tmp"
+                final = self.dir / f"step_{step:09d}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir()
+                np.savez(tmp / "leaves.npz", **host)
+                manifest = {"step": step,
+                            "keys": sorted(host.keys()),
+                            "shapes": {k: list(v.shape)
+                                       for k, v in host.items()},
+                            "dtypes": {k: str(v.dtype)
+                                       for k, v in host.items()}}
+                with open(tmp / "manifest.json", "w") as f:
+                    json.dump(manifest, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                if final.exists():
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                self._prune()
+            except BaseException as e:      # surfaced on next wait()
+                self._error = e
+
+        if self.async_save and not blocking:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            self._raise_pending()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_pending()
+
+    def _raise_pending(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep_last] if self.keep_last else []:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # -- load --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.iterdir():
+            m = re.fullmatch(r"step_(\d+)", p.name)
+            if m and (p / "manifest.json").exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None) -> Any:
+        if step is None:
+            step = self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:09d}"
+        with np.load(path / "leaves.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        return _unflatten(flat)
+
+    def restore_sharded(self, mesh, spec_tree, step: Optional[int] = None):
+        """Elastic restore: place the logical checkpoint onto any mesh."""
+        from repro.distributed import sharding as shd
+        tree = self.restore(step)
+        return shd.shard_tree(tree, mesh, spec_tree)

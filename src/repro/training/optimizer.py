@@ -1,0 +1,178 @@
+"""Optimizers: AdamW, Adafactor, SGD — self-contained (no optax).
+
+Interface:  opt = adamw(lr=...);  state = opt.init(params)
+            updates, state = opt.update(grads, state, params)
+            params = tree_map(lambda p, u: p + u, params, updates)
+
+Adafactor exists because 1T-param models (kimi-k2) cannot afford Adam's
+2x fp32 moments on a 512-chip pod: the second moment is factored into
+row/col statistics (O(n+m) per matrix instead of O(nm)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, count):
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def sched(count):
+        count = count.astype(jnp.float32)
+        warm = peak * count / max(warmup, 1)
+        frac = jnp.clip((count - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5
+                      * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(count < warmup, warm, cos)
+    return sched
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    kind: str
+    global_norm: Callable = global_norm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+def adamw(lr: Schedule = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros(), "v": zeros(),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9)) \
+            if clip_norm else 1.0
+        lr_t = _lr_at(lr, count)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / (1 - b1 ** count.astype(jnp.float32))
+            vhat = v2 / (1 - b2 ** count.astype(jnp.float32))
+            step = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                            + weight_decay * p.astype(jnp.float32))
+            return step, m2, v2
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                     params)
+        updates = jax.tree_util.tree_map(lambda o: o[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init=init, update=update, kind="adamw")
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment, no fp32 master copies)
+# --------------------------------------------------------------------------
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(lr: Schedule = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        def vr(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape)
+                    else jnp.zeros(p.shape, jnp.float32))
+
+        def vc(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p.shape) else jnp.zeros((0,), jnp.float32))
+
+        return {"vr": jax.tree_util.tree_map(vr, params),
+                "vc": jax.tree_util.tree_map(vc, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** -decay
+        lr_t = _lr_at(lr, count)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(g.shape):
+                vr2 = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc2 = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr2[..., None] * vc2[..., None, :]
+                    / jnp.maximum(jnp.mean(vr2, axis=-1, keepdims=True)
+                                  [..., None], eps))
+            else:
+                vr2 = beta * vr + (1 - beta) * g2
+                vc2 = vc
+                denom = jnp.sqrt(vr2)
+            u = g / jnp.maximum(denom, eps)
+            # RMS clipping (Adafactor's update clipping)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            step = -lr_t * (u + weight_decay * p.astype(jnp.float32))
+            return step, vr2, vc2
+
+        out = jax.tree_util.tree_map(upd, grads, state["vr"], state["vc"],
+                                     params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"vr": pick(1), "vc": pick(2), "count": count}
+
+    return Optimizer(init=init, update=update, kind="adafactor")
+
+
+def sgd(lr: Schedule = 1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr_t = _lr_at(lr, count)
+
+        def upd(g, m):
+            m2 = momentum * m + g.astype(jnp.float32)
+            return -lr_t * m2, m2
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"])
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "count": count}
+
+    return Optimizer(init=init, update=update, kind="sgd")
+
+
+def make(cfg, total_steps: int = 10000, peak_lr: float = 3e-4) -> Optimizer:
+    sched = warmup_cosine(peak_lr, min(1000, total_steps // 10), total_steps)
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr=sched)
+    return adamw(lr=sched, weight_decay=0.1)

@@ -1,0 +1,93 @@
+"""Loss derivative checks against numeric gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses
+from repro.data.synthetic import _group_index
+
+
+def _numeric_grad(f, raw, eps=1e-3):
+    g = np.zeros_like(raw)
+    for i in range(raw.shape[0]):
+        for c in range(raw.shape[1]):
+            p = raw.copy()
+            p[i, c] += eps
+            m = raw.copy()
+            m[i, c] -= eps
+            g[i, c] = (f(p) - f(m)) / (2 * eps)
+    return g
+
+
+@pytest.mark.parametrize("name,make_y", [
+    ("rmse", lambda rng, n: rng.normal(size=n).astype(np.float32)),
+    ("logloss", lambda rng, n: (rng.random(n) < 0.5).astype(np.float32)),
+    ("quantile", lambda rng, n: rng.normal(size=n).astype(np.float32)),
+])
+def test_grad_matches_numeric(name, make_y):
+    rng = np.random.default_rng(0)
+    n = 12
+    y = make_y(rng, n)
+    loss = losses.make_loss(name)
+    raw = rng.normal(size=(n, 1)).astype(np.float32)
+
+    def f(r):
+        return float(loss.value(jnp.asarray(r), jnp.asarray(y))) * n
+
+    g, h = loss.grad_hess(jnp.asarray(raw), jnp.asarray(y))
+    gn = _numeric_grad(f, raw)
+    np.testing.assert_allclose(np.asarray(g), gn, rtol=5e-2, atol=5e-2)
+    assert np.all(np.asarray(h) >= 0)
+
+
+def test_multiclass_grad_matches_numeric():
+    rng = np.random.default_rng(1)
+    n, c = 8, 4
+    y = rng.integers(0, c, n)
+    loss = losses.make_loss("multiclass", n_classes=c)
+    raw = rng.normal(size=(n, c)).astype(np.float32)
+
+    def f(r):
+        return float(loss.value(jnp.asarray(r), jnp.asarray(y))) * n
+
+    g, h = loss.grad_hess(jnp.asarray(raw), jnp.asarray(y))
+    gn = _numeric_grad(f, raw)
+    np.testing.assert_allclose(np.asarray(g), gn, rtol=5e-2, atol=5e-2)
+    assert np.all(np.asarray(h) >= 0)
+
+
+def test_pairlogit_grad_matches_numeric():
+    rng = np.random.default_rng(2)
+    n = 14
+    gi = _group_index(rng, n, 5)
+    y = rng.integers(0, 3, n).astype(np.float32)
+    loss = losses.make_loss("yetirank", group_index=gi)
+    raw = rng.normal(size=(n, 1)).astype(np.float32)
+    n_pairs_norm = None
+
+    def f(r):
+        # value() is mean over pairs; grads sum over pairs -> rescale
+        s, valid = loss._padded(jnp.asarray(r)[:, 0])
+        rel, _ = loss._padded(jnp.asarray(y))
+        better = (rel[:, :, None] > rel[:, None, :])
+        ok = (better & valid[:, :, None] & valid[:, None, :])
+        n_pairs = float(ok.sum())
+        return float(loss.value(jnp.asarray(r), jnp.asarray(y))) * n_pairs
+
+    g, h = loss.grad_hess(jnp.asarray(raw), jnp.asarray(y))
+    gn = _numeric_grad(f, raw)
+    np.testing.assert_allclose(np.asarray(g), gn, rtol=1e-1, atol=1e-1)
+    assert np.all(np.asarray(h) > 0)
+
+
+def test_pairlogit_gradient_sums_to_zero():
+    """Pairwise losses are translation-invariant within a group."""
+    rng = np.random.default_rng(3)
+    n = 20
+    gi = _group_index(rng, n, 6)
+    y = rng.integers(0, 3, n).astype(np.float32)
+    loss = losses.make_loss("yetirank", group_index=gi)
+    raw = rng.normal(size=(n, 1)).astype(np.float32)
+    g, _ = loss.grad_hess(jnp.asarray(raw), jnp.asarray(y))
+    assert abs(float(jnp.sum(g))) < 1e-3

@@ -1,0 +1,105 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.kernels import ops, ref
+
+COMMON = dict(deadline=None, max_examples=20,
+              suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+@given(n=st.integers(1, 80), f=st.integers(1, 40), b=st.integers(1, 20),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_binarize_counts_borders(n, f, b, seed):
+    """bins == #borders strictly below the value, for any data."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    borders = np.sort(rng.normal(size=(b, f)).astype(np.float32), axis=0)
+    got = np.asarray(ref.binarize(jnp.asarray(x), jnp.asarray(borders)))
+    want = (x[:, None, :] > borders[None, :, :]).sum(1)
+    np.testing.assert_array_equal(got, want)
+    assert got.min() >= 0 and got.max() <= b
+
+
+@given(n=st.integers(1, 60), f=st.integers(2, 30), t=st.integers(1, 25),
+       d=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_leaf_index_in_range(n, f, t, d, seed):
+    rng = np.random.default_rng(seed)
+    bins = rng.integers(0, 32, (n, f)).astype(np.int32)
+    sf = rng.integers(0, f, (t, d)).astype(np.int32)
+    sb = rng.integers(0, 33, (t, d)).astype(np.int32)
+    idx = np.asarray(ref.leaf_index(jnp.asarray(bins), jnp.asarray(sf),
+                                    jnp.asarray(sb)))
+    assert idx.min() >= 0 and idx.max() < 2 ** d
+
+
+@given(n=st.integers(1, 40), t=st.integers(1, 20), d=st.integers(1, 6),
+       c=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_predict_invariant_under_tree_permutation(n, t, d, c, seed):
+    """Summing over trees is order-independent."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, 2 ** d, (n, t)).astype(np.int32)
+    lv = rng.normal(size=(t, 2 ** d, c)).astype(np.float32)
+    perm = rng.permutation(t)
+    a = np.asarray(ref.leaf_gather(jnp.asarray(idx), jnp.asarray(lv)))
+    b = np.asarray(ref.leaf_gather(jnp.asarray(idx[:, perm]),
+                                   jnp.asarray(lv[perm])))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+@given(m=st.integers(1, 20), n=st.integers(1, 20), k=st.integers(1, 40),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_l2_matrix_properties(m, n, k, seed):
+    """Non-negativity, zero self-distance, symmetry."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(n, k)).astype(np.float32)
+    d_ab = np.asarray(ref.l2sq_matrix(jnp.asarray(a), jnp.asarray(b)))
+    d_ba = np.asarray(ref.l2sq_matrix(jnp.asarray(b), jnp.asarray(a)))
+    assert d_ab.min() >= 0
+    np.testing.assert_allclose(d_ab, d_ba.T, rtol=1e-4, atol=1e-4)
+    d_aa = np.asarray(ref.l2sq_matrix(jnp.asarray(a), jnp.asarray(a)))
+    np.testing.assert_allclose(np.diag(d_aa), 0.0, atol=1e-3)
+
+
+@given(n=st.integers(2, 50), seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_monotone_feature_shifts_bins_monotonically(n, seed):
+    """Raising a feature value never lowers its bin (monotonicity)."""
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.normal(size=(n, 1)).astype(np.float32), axis=0)
+    borders = np.sort(rng.normal(size=(10, 1)).astype(np.float32), axis=0)
+    bins = np.asarray(ref.binarize(jnp.asarray(x), jnp.asarray(borders)))
+    assert np.all(np.diff(bins[:, 0]) >= 0)
+
+
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 6))
+@settings(**COMMON)
+def test_padded_trees_are_noops(seed, d):
+    """ops padding contract: PAD split_bin trees contribute leaf 0 and
+    zero leaf values, so padding never changes predictions."""
+    rng = np.random.default_rng(seed)
+    n, f, t = 30, 8, 5
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    borders = np.sort(rng.normal(size=(16, f)).astype(np.float32), 0)
+    sf = rng.integers(0, f, (t, d)).astype(np.int32)
+    sb = rng.integers(1, 16, (t, d)).astype(np.int32)
+    lv = rng.normal(size=(t, 2 ** d, 3)).astype(np.float32)
+    base = np.asarray(ref.fused_predict(
+        jnp.asarray(x), jnp.asarray(borders), jnp.asarray(sf),
+        jnp.asarray(sb), jnp.asarray(lv)))
+    # pad with 3 inert trees
+    sf2 = np.concatenate([sf, np.zeros((3, d), np.int32)])
+    sb2 = np.concatenate([sb, np.full((3, d), ops.PAD_SPLIT_BIN, np.int32)])
+    lv2 = np.concatenate([lv, np.zeros((3, 2 ** d, 3), np.float32)])
+    padded = np.asarray(ref.fused_predict(
+        jnp.asarray(x), jnp.asarray(borders), jnp.asarray(sf2),
+        jnp.asarray(sb2), jnp.asarray(lv2)))
+    np.testing.assert_allclose(base, padded, rtol=1e-6, atol=1e-6)

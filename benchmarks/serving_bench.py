@@ -1,0 +1,133 @@
+"""Serving throughput benchmark: requests/s and p50/p99 latency vs.
+batch-bucket configuration.
+
+Drives a `GBDTServer` with a realistic ragged request-size stream (sizes
+drawn log-uniform in [1, max_batch]) through the synchronous bucketed
+path, for several bucket ladders:
+
+  exact      one bucket per distinct size — the seed behaviour: every new
+             size is a fresh XLA trace (unbounded recompilation)
+  pow2       power-of-two ladder (the production default)
+  coarse     two buckets (min, max) — maximum padding, minimum compiles
+  single     one max-size bucket
+
+Emits the same ``name,us_per_call,derived`` CSV rows as benchmarks.run.
+
+  PYTHONPATH=src python -m benchmarks.serving_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def eprint(*a):
+    print(*a, file=sys.stderr, flush=True)
+
+
+def _build_model(n_trees: int):
+    from repro.core import boosting, losses
+    from repro.core.boosting import BoostingParams
+    from repro.data import synthetic
+
+    ds = synthetic.load("covertype", scale=0.003)
+    loss = losses.make_loss("multiclass", n_classes=7)
+    ens, _ = boosting.fit(ds.x_train, ds.y_train, loss=loss,
+                          params=BoostingParams(n_trees=n_trees, depth=5,
+                                                learning_rate=0.3))
+    return ens, ds
+
+
+def _request_sizes(n_batches: int, max_batch: int,
+                   seed: int = 0) -> list[int]:
+    rng = np.random.default_rng(seed)
+    # log-uniform: mostly small interactive batches, occasional bulk ones
+    return [int(np.clip(np.exp(rng.uniform(0, np.log(max_batch))), 1,
+                        max_batch)) for _ in range(n_batches)]
+
+
+def bench_config(label: str, ens, xs: np.ndarray, sizes: list[int],
+                 buckets, max_batch: int) -> dict:
+    from repro.serving.engine import GBDTServer
+
+    server = GBDTServer(ens, strategy="staged", backend="ref",
+                        max_batch=max_batch, buckets=buckets,
+                        name=label)
+    lat = []
+    try:
+        # warm the compile caches so steady-state latency is measured,
+        # then time each batch individually
+        server.predict_batch(xs[:max_batch])
+        t_start = time.perf_counter()
+        for n in sizes:
+            t0 = time.perf_counter()
+            server.predict_batch(xs[:n])
+            lat.append(time.perf_counter() - t0)
+        wall = time.perf_counter() - t_start
+        snap = server.metrics.snapshot()
+    finally:
+        server.close()
+    lat_ms = np.asarray(lat) * 1e3
+    n_req = int(np.sum(sizes))
+    return {
+        "label": label,
+        "buckets": len(server.buckets),
+        "recompiles": snap["recompiles"],
+        "req_s": n_req / wall,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "pad_overhead": snap["pad_overhead"],
+        "us_per_req": wall / n_req * 1e6,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--max-batch", type=int, default=256)
+    args = ap.parse_args()
+
+    n_trees = 30 if args.quick else 100
+    n_batches = 40 if args.quick else 150
+    max_batch = min(args.max_batch, 64) if args.quick else args.max_batch
+
+    ens, ds = _build_model(n_trees)
+    xs = np.asarray(ds.x_test, np.float32)
+    while len(xs) < max_batch:
+        xs = np.concatenate([xs, xs])
+    sizes = _request_sizes(n_batches, max_batch)
+
+    from repro.serving.batching import pow2_buckets
+    configs = [
+        ("exact", tuple(sorted(set(sizes) | {max_batch}))),
+        ("pow2", pow2_buckets(max_batch)),
+        ("coarse", (pow2_buckets(max_batch)[0], pow2_buckets(max_batch)[-1])),
+        ("single", (pow2_buckets(max_batch)[-1],)),
+    ]
+
+    eprint(f"# serving bench: {n_batches} ragged batches, "
+           f"{int(np.sum(sizes))} requests, max_batch={max_batch}, "
+           f"{n_trees} trees")
+    eprint(f"{'config':10s} {'buckets':>7s} {'recomp':>7s} {'req/s':>9s} "
+           f"{'p50ms':>7s} {'p99ms':>7s} {'pad%':>6s}")
+    rows = []
+    for label, buckets in configs:
+        r = bench_config(label, ens, xs, sizes, buckets, max_batch)
+        eprint(f"{r['label']:10s} {r['buckets']:7d} {r['recompiles']:7d} "
+               f"{r['req_s']:9.0f} {r['p50_ms']:7.2f} {r['p99_ms']:7.2f} "
+               f"{100 * r['pad_overhead']:6.1f}")
+        rows.append(f"serving/{r['label']},{r['us_per_req']:.1f},"
+                    f"req_s={r['req_s']:.0f};p50_ms={r['p50_ms']:.2f};"
+                    f"p99_ms={r['p99_ms']:.2f};recompiles={r['recompiles']};"
+                    f"pad={r['pad_overhead']:.2f}")
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

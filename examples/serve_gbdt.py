@@ -2,8 +2,15 @@
 (the paper's speedup exists only for batched prediction — this is the
 production shape of that finding).
 
-Run:  PYTHONPATH=src python examples/serve_gbdt.py
+Concurrent clients hit the deadline batcher; flushed batches are padded
+to power-of-two buckets so the jitted predict path compiles at most
+once per bucket (see docs/serving.md).  Strategy/backend are
+configurable: --strategy fused runs the single-pass Pallas kernel path.
+
+Run:  PYTHONPATH=src python examples/serve_gbdt.py [--strategy fused]
 """
+import argparse
+import json
 import threading
 import time
 
@@ -16,14 +23,26 @@ from repro.serving.engine import GBDTServer
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", choices=["auto", "staged", "fused"],
+                    default="auto")
+    ap.add_argument("--backend", choices=["auto", "pallas", "ref"],
+                    default="auto")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--per-client", type=int, default=25)
+    args = ap.parse_args()
+
     ds = synthetic.load("santander", scale=0.004)
     loss = losses.make_loss("logloss")
     ens, _ = boosting.fit(ds.x_train, ds.y_train, loss=loss,
                           params=BoostingParams(n_trees=100, depth=2,
                                                 learning_rate=0.1))
-    server = GBDTServer(ens, max_batch=128, max_wait_ms=3.0)
+    server = GBDTServer(ens, strategy=args.strategy, backend=args.backend,
+                        max_batch=128, max_wait_ms=3.0, name="santander")
+    print(f"strategy={args.strategy} backend={args.backend} "
+          f"buckets={server.buckets}")
 
-    n_clients, per_client = 8, 25
+    n_clients, per_client = args.clients, args.per_client
     lat: list[float] = []
     lock = threading.Lock()
 
@@ -48,12 +67,17 @@ def main():
 
     lat_ms = np.asarray(lat) * 1e3
     sizes = server.batcher.batch_sizes
+    snap = server.metrics.snapshot()
     print(f"served {n} requests in {wall:.2f}s "
           f"({n / wall:.0f} req/s)")
     print(f"latency p50={np.percentile(lat_ms, 50):.1f}ms "
           f"p99={np.percentile(lat_ms, 99):.1f}ms")
     print(f"batches formed: {len(sizes)}, mean size "
           f"{np.mean(sizes):.1f} (batching amortizes the vector width)")
+    print(f"bucket usage: {server.batcher.bucket_counts}; "
+          f"recompiles={snap['recompiles']} "
+          f"(bounded by {len(server.buckets)} buckets)")
+    print(f"server metrics: {json.dumps(snap, default=float)}")
     server.close()
 
 

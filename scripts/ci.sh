@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# CI smoke: tier-1 tests + the import-time-sensitive entrypoints.
+#
+# The failure class this guards against: an import that works on one jax
+# version and not the pinned one (e.g. `from jax import shard_map`)
+# breaks the *entire* suite at collection.  Importing every package
+# module first localizes such a break to one line of output.
+#
+#   bash scripts/ci.sh          # full tier-1 run
+#   CI_QUICK=1 bash scripts/ci.sh   # skip the slow learning tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== import check (every repro module) =="
+python - <<'EOF'
+import importlib, pathlib, pkgutil, sys
+
+import repro
+failures = []
+for mod in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+    try:
+        importlib.import_module(mod.name)
+    except Exception as e:          # noqa: BLE001 — report, keep walking
+        failures.append((mod.name, repr(e)))
+for name, err in failures:
+    print(f"IMPORT FAIL {name}: {err}", file=sys.stderr)
+sys.exit(1 if failures else 0)
+EOF
+
+echo "== tier-1 pytest =="
+if [[ "${CI_QUICK:-0}" == "1" ]]; then
+    python -m pytest -x -q tests/test_serving.py tests/test_kernels.py \
+        tests/test_kernel_blocks.py tests/test_sharding.py
+else
+    python -m pytest -x -q
+fi
+
+echo "== quickstart example =="
+python examples/quickstart.py
+
+echo "== serving benchmark (quick) =="
+python -m benchmarks.serving_bench --quick >/dev/null
+
+echo "CI OK"

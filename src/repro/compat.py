@@ -1,0 +1,86 @@
+"""Version compatibility shims.
+
+`shard_map` moved from `jax.experimental.shard_map` to the top-level
+`jax` namespace around jax 0.4.35/0.5; the pinned container image ships
+0.4.37 where only the experimental path exists.  Import it from here
+everywhere so the repo runs on either side of the move:
+
+    from repro.compat import shard_map
+"""
+from __future__ import annotations
+
+try:                                      # jax >= 0.4.35 (top-level export)
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:                       # jax 0.4.x experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f=None, **kw):
+    """`shard_map` accepting either replication-check spelling.
+
+    The flag that disables the output-replication check is `check_vma`
+    on new jax and `check_rep` on 0.4.x; translate whichever the caller
+    used to the one this jax understands.
+    """
+    if "check_vma" in kw or "check_rep" in kw:
+        flag = kw.pop("check_vma", kw.pop("check_rep", None))
+        for name in ("check_vma", "check_rep"):
+            try:
+                return (_shard_map(f, **kw, **{name: flag}) if f is not None
+                        else _shard_map(**kw, **{name: flag}))
+            except TypeError as e:
+                if name not in str(e):
+                    raise
+        raise TypeError("shard_map accepts neither check_vma nor check_rep")
+    return _shard_map(f, **kw) if f is not None else _shard_map(**kw)
+
+
+def pvary(x, axis_names):
+    """`jax.lax.pvary` where it exists, identity elsewhere.
+
+    pvary only annotates device-variance for the new-jax vma checker;
+    on 0.4.x there is no checker (we run shard_map with check_rep=False)
+    and the annotation has no runtime effect, so identity is exact.
+    """
+    import jax
+
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is None:
+        return x
+    return fn(x, tuple(axis_names))
+
+
+def make_mesh(shape, axis_names, *, devices=None):
+    """`jax.make_mesh` with explicit Auto axis types where supported.
+
+    jax >= 0.5 accepts ``axis_types=(jax.sharding.AxisType.Auto, ...)``;
+    0.4.x has neither the parameter nor the enum (every axis is Auto
+    implicitly), so fall back to the plain call.
+    """
+    import jax
+
+    try:
+        return jax.make_mesh(
+            tuple(shape), tuple(axis_names), devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(shape)))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(tuple(shape), tuple(axis_names),
+                             devices=devices)
+
+
+def abstract_mesh(shape, axis_names):
+    """Device-free mesh metadata across the AbstractMesh API change.
+
+    jax >= 0.5 takes ``AbstractMesh(shape_tuple, axis_names)``; 0.4.x
+    takes a single tuple of ``(name, size)`` pairs.
+    """
+    import jax
+
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(tuple(axis_names), tuple(shape))))
+
+
+__all__ = ["shard_map", "pvary", "make_mesh", "abstract_mesh"]

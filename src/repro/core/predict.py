@@ -34,15 +34,22 @@ Strategy = Literal["auto", "staged", "fused"]
 def raw_predict(ensemble: ObliviousEnsemble, x: jax.Array, *,
                 strategy: Strategy = "auto",
                 backend: str = "auto",
-                tree_block: int = 0) -> jax.Array:
-    """(N, F) float32 -> (N, C) float32 raw scores (sum over trees)."""
+                tree_block: int = 0,
+                block_n: int | None = None,
+                block_t: int | None = None) -> jax.Array:
+    """(N, F) float32 -> (N, C) float32 raw scores (sum over trees).
+
+    block_n/block_t override the fused kernel's Pallas block shapes;
+    left as None they are autotuned per ensemble by `kernels.tuning`.
+    """
     if strategy == "auto":
         strategy = "fused" if jax.default_backend() == "tpu" else "staged"
     base = ensemble.base_score[None, :]
     if strategy == "fused":
         return base + ops.fused_predict(
             x, ensemble.borders, ensemble.split_features,
-            ensemble.split_bins, ensemble.leaf_values, backend=backend)
+            ensemble.split_bins, ensemble.leaf_values, backend=backend,
+            block_n=block_n, block_t=block_t)
     bins = ops.binarize(x, ensemble.borders, backend=backend)
     if tree_block and ensemble.n_trees > tree_block:
         # Paper-faithful CalcTreesBlockedImpl: process trees in blocks so the
@@ -87,7 +94,7 @@ def predict_sharded(ensemble: ObliviousEnsemble, x: jax.Array, mesh,
     yields the ensemble total.  in/out shardings are explicit so this
     lowers cleanly on the production meshes.
     """
-    from jax import shard_map
+    from repro.compat import shard_map
 
     dp = P(data_axes)
     tree_p = P(model_axis)

@@ -19,8 +19,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import pvary, shard_map
 
 
 # --------------------------------------------------------------------------
@@ -92,7 +93,7 @@ def ring_allgather_matmul(mesh: Mesh, axis: str = "model") -> Callable:
         acc0 = jnp.zeros((x.shape[0], w_shard.shape[1]), x.dtype)
         # mark the accumulator as device-varying over the ring axis so the
         # loop carry types line up with the permuted weight shard
-        acc0 = jax.lax.pvary(acc0, (axis,))
+        acc0 = pvary(acc0, (axis,))
         acc, _, _ = jax.lax.fori_loop(0, n_shards, body,
                                       (acc0, w_shard, idx))
         return acc
@@ -131,12 +132,12 @@ def ring_attention(mesh: Mesh, *, axis: str = "model",
         scale = Dh ** -0.5
         qpos = q_off + jnp.arange(S_loc)
 
-        o0 = jax.lax.pvary(jnp.zeros((B, KVH, G, S_loc, Dh), jnp.float32),
-                           (axis,))
-        m0 = jax.lax.pvary(jnp.full((B, KVH, G, S_loc), -1e30, jnp.float32),
-                           (axis,))
-        l0 = jax.lax.pvary(jnp.zeros((B, KVH, G, S_loc), jnp.float32),
-                           (axis,))
+        o0 = pvary(jnp.zeros((B, KVH, G, S_loc, Dh), jnp.float32),
+                   (axis,))
+        m0 = pvary(jnp.full((B, KVH, G, S_loc), -1e30, jnp.float32),
+                   (axis,))
+        l0 = pvary(jnp.zeros((B, KVH, G, S_loc), jnp.float32),
+                   (axis,))
 
         def step(j, carry):
             o, m, l, kc, vc = carry

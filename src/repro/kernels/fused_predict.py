@@ -79,12 +79,24 @@ def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
                   split_bins: jax.Array, leaf_values: jax.Array, *,
                   block_n: int = 128, block_t: int = 16,
                   interpret: bool = False) -> jax.Array:
-    """Fused GBDT predict -> (N, C) float32.  Pre-padded N, T; padded trees
-    must have zero leaf_values and split_bins > #bins."""
+    """Fused GBDT predict -> (N, C) float32.
+
+    Raw kernel entry: N and T must already be multiples of the block
+    shapes and padded trees must carry zero leaf_values and
+    split_bins > #bins (padded samples/features are harmless zeros).
+    `kernels.ops.fused_predict` is the public wrapper that performs that
+    padding and picks the block shapes from the tuner — call it, not
+    this, unless you have pre-padded tensors.
+    """
     N, F = x.shape
     B = borders.shape[0]
     T, D = split_features.shape
     _, L, C = leaf_values.shape
+    if N % block_n or T % block_t:
+        raise ValueError(
+            f"fused_predict requires padded inputs: N={N} % block_n="
+            f"{block_n} and T={T} % block_t={block_t} must be 0 "
+            "(use kernels.ops.fused_predict for automatic padding)")
     grid = (N // block_n, T // block_t)
     return pl.pallas_call(
         functools.partial(_fused_kernel, n_borders=B),

@@ -20,6 +20,7 @@ from repro.kernels import l2dist as _l2_k
 from repro.kernels import leaf_gather as _gather_k
 from repro.kernels import leaf_index as _index_k
 from repro.kernels import ref as _ref
+from repro.kernels import tuning as _tuning
 
 Backend = Literal["auto", "pallas", "ref"]
 
@@ -142,15 +143,28 @@ def l2sq_matrix(a: jax.Array, b: jax.Array, *, backend: Backend = "auto",
 
 def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
                   split_bins: jax.Array, leaf_values: jax.Array, *,
-                  backend: Backend = "auto", block_n: int = 128,
-                  block_t: int = 16) -> jax.Array:
-    """Fused binarize+index+gather -> (N, C) f32."""
+                  backend: Backend = "auto", block_n: int | None = None,
+                  block_t: int | None = None) -> jax.Array:
+    """Fused binarize+index+gather -> (N, C) f32.
+
+    Inputs need no pre-padding: N/T/F are padded here to the block
+    multiples (padded trees get zero leaf values and an impossible
+    split bin, so they contribute nothing).  When block_n/block_t are
+    None the shapes come from the VMEM footprint model in
+    `kernels.tuning` (the RVV-LMUL analog), sized to this ensemble and
+    batch instead of a fixed (128, 16).
+    """
     if not _use_pallas(backend):
         return _ref.fused_predict(x, borders, split_features, split_bins,
                                   leaf_values)
     N, F = x.shape
     T, D = split_features.shape
     _, L, C = leaf_values.shape
+    if block_n is None or block_t is None:
+        tn, tt = _tuning.best_fused_blocks(
+            F, D, L, C, borders.shape[0], n_rows=N, n_trees=T)
+        block_n = block_n or tn
+        block_t = block_t or tt
     Np = _round_up(N, block_n)
     Tp = _round_up(T, block_t)
     Fp = _round_up(F, 128)

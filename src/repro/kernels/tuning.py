@@ -68,8 +68,24 @@ class Candidate:
     score: float
 
 
+def _pad_utilization(n: int, block: int) -> float:
+    """Fraction of padded work that is real when n is rounded up to a
+    multiple of block (1.0 when block divides n or n unknown)."""
+    padded = block * ((n + block - 1) // block) if n > 0 else block
+    return n / padded if n > 0 else 1.0
+
+
 def candidates_fused(F: int, D: int, L: int, C: int, n_borders: int,
-                     budget: int = VMEM_BUDGET) -> list[Candidate]:
+                     budget: int = VMEM_BUDGET, *,
+                     n_rows: int | None = None,
+                     n_trees: int | None = None) -> list[Candidate]:
+    """Candidate (block_n, block_t) grid, best first.
+
+    When the workload shape (n_rows, n_trees) is known — the serving path
+    always knows it — candidates that force heavy zero-padding are
+    penalized by the fraction of padded work that is real, so a 150-row
+    bucket is not handed a 1024-row block.
+    """
     out = []
     for bn in (64, 128, 256, 512, 1024):
         for bt in (8, 16, 32, 64):
@@ -79,13 +95,20 @@ def candidates_fused(F: int, D: int, L: int, C: int, n_borders: int,
             # prefer larger tiles (fewer grid steps) once aligned
             score = _align_score(bn, LANE) * min(1.0, fp / budget + 0.2) \
                 * (bn * bt) ** 0.25
+            if n_rows is not None:
+                score *= _pad_utilization(n_rows, bn)
+            if n_trees is not None:
+                score *= _pad_utilization(n_trees, bt)
             out.append(Candidate(bn, bt, fp, score))
     return sorted(out, key=lambda c: -c.score)
 
 
 def best_fused_blocks(F: int, D: int, L: int, C: int,
-                      n_borders: int) -> tuple[int, int]:
-    cands = candidates_fused(F, D, L, C, n_borders)
+                      n_borders: int, *,
+                      n_rows: int | None = None,
+                      n_trees: int | None = None) -> tuple[int, int]:
+    cands = candidates_fused(F, D, L, C, n_borders,
+                             n_rows=n_rows, n_trees=n_trees)
     if not cands:
         return 128, 16
     return cands[0].block_n, cands[0].block_t

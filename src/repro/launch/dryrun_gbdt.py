@@ -52,7 +52,7 @@ def lower_predict(mesh):
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
     def predict(sf, sb, lv, borders, x):
-        from jax import shard_map
+        from repro.compat import shard_map
 
         def local(sf, sb, lv, borders, xs):
             bins = ref.binarize(xs, borders)

@@ -12,10 +12,12 @@ import numpy as np
 
 
 def serve_gbdt(args):
+    import json
+
     from repro.core import boosting, losses
     from repro.core.boosting import BoostingParams
     from repro.data import synthetic
-    from repro.serving.engine import GBDTServer
+    from repro.serving.engine import ModelRegistry
 
     ds = synthetic.load(args.dataset, scale=args.scale)
     loss = losses.make_loss(ds.loss, n_classes=max(ds.n_classes, 2),
@@ -24,15 +26,23 @@ def serve_gbdt(args):
                           params=BoostingParams(
                               n_trees=args.trees, depth=ds.params.depth,
                               learning_rate=0.1))
-    server = GBDTServer(ens, max_batch=args.batch)
+    registry = ModelRegistry(max_batch=args.batch,
+                             strategy=args.strategy, backend=args.backend,
+                             tree_block=args.tree_block,
+                             min_bucket=args.min_bucket)
+    server = registry.register(args.dataset, ens)
+    print(f"[serve:gbdt] model={args.dataset} strategy={args.strategy} "
+          f"backend={args.backend} buckets={server.buckets}")
     t0 = time.perf_counter()
     n = 200
     for i in range(n):
-        server.predict(ds.x_test[i % len(ds.x_test)])
+        registry.predict(args.dataset, ds.x_test[i % len(ds.x_test)])
     dt = time.perf_counter() - t0
     print(f"[serve:gbdt] {n} sequential requests in {dt:.2f}s; "
           f"batches={len(server.batcher.batch_sizes)}")
-    server.close()
+    print(f"[serve:gbdt] metrics: "
+          f"{json.dumps(registry.metrics()[args.dataset], default=float)}")
+    registry.close()
 
 
 def serve_lm(args):
@@ -64,6 +74,14 @@ def main():
     ap.add_argument("--scale", type=float, default=0.004)
     ap.add_argument("--trees", type=int, default=100)
     ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--strategy", choices=["auto", "staged", "fused"],
+                    default="auto")
+    ap.add_argument("--backend", choices=["auto", "pallas", "ref"],
+                    default="auto")
+    ap.add_argument("--tree-block", type=int, default=0,
+                    help="staged-path tree block (0 = whole ensemble)")
+    ap.add_argument("--min-bucket", type=int, default=16,
+                    help="smallest batch-size padding bucket")
     args = ap.parse_args()
     (serve_gbdt if args.mode == "gbdt" else serve_lm)(args)
 

@@ -1,2 +1,6 @@
-"""Serving substrate: request batching + GBDT/LM engines."""
-from repro.serving import engine  # noqa: F401
+"""Serving substrate: request batching + GBDT/LM engines + metrics."""
+from repro.serving import batching, engine, metrics  # noqa: F401
+from repro.serving.batching import (Batcher, BucketedBatcher,  # noqa: F401
+                                    bucket_for, pad_rows, pow2_buckets)
+from repro.serving.engine import GBDTServer, ModelRegistry  # noqa: F401
+from repro.serving.metrics import ServerMetrics  # noqa: F401

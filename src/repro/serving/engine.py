@@ -1,10 +1,16 @@
 """Serving engines — the paper's use case is batched prediction (its
 Table 5 speedups exist only when samples arrive in batches; single-sample
 inference gains nothing from vectorization, as the paper notes in its
-limitations).  The batcher aggregates requests into vector-width batches.
+limitations).  Request aggregation and bucket padding live in
+`repro.serving.batching`; per-model counters in `repro.serving.metrics`.
 
 * GBDTServer: batched oblivious-tree scoring with the vectorized predict
-  pipeline; optional device-mesh sharding.
+  pipeline — strategy (staged/fused/auto), backend, tree blocking and
+  Pallas block shapes are all configurable; incoming batches are padded
+  to size buckets so retraces stay bounded; optional device-mesh
+  sharding.
+* ModelRegistry: several named ensembles served from one process, each
+  with its own server config and metrics.
 * EmbeddingGBDTPipeline: the paper's image-embeddings workload as a
   production pattern — backbone embeddings -> KNN features -> GBDT head
   (any of the 10 assigned LM backbones can produce the embeddings).
@@ -12,11 +18,7 @@ limitations).  The batcher aggregates requests into vector-width batches.
 """
 from __future__ import annotations
 
-import dataclasses
-import queue
-import threading
-import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,86 +26,147 @@ import numpy as np
 
 from repro.core import knn, predict
 from repro.core.trees import ObliviousEnsemble
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    payload: np.ndarray
-    future: "queue.Queue"
-
-
-class Batcher:
-    """Deadline-or-size request batching (max_batch or max_wait_ms)."""
-
-    def __init__(self, serve_fn: Callable[[np.ndarray], np.ndarray], *,
-                 max_batch: int = 256, max_wait_ms: float = 2.0):
-        self.serve_fn = serve_fn
-        self.max_batch = max_batch
-        self.max_wait = max_wait_ms / 1e3
-        self.q: queue.Queue = queue.Queue()
-        self._stop = threading.Event()
-        self.batch_sizes: list[int] = []
-        self.thread = threading.Thread(target=self._loop, daemon=True)
-        self.thread.start()
-
-    def _loop(self):
-        while not self._stop.is_set():
-            try:
-                first: Request = self.q.get(timeout=0.05)
-            except queue.Empty:
-                continue
-            batch = [first]
-            deadline = time.perf_counter() + self.max_wait
-            while len(batch) < self.max_batch:
-                left = deadline - time.perf_counter()
-                if left <= 0:
-                    break
-                try:
-                    batch.append(self.q.get(timeout=left))
-                except queue.Empty:
-                    break
-            xs = np.stack([r.payload for r in batch])
-            self.batch_sizes.append(len(batch))
-            ys = np.asarray(self.serve_fn(xs))
-            for r, y in zip(batch, ys):
-                r.future.put(y)
-
-    def submit(self, rid: int, payload: np.ndarray) -> "queue.Queue":
-        fut: queue.Queue = queue.Queue(maxsize=1)
-        self.q.put(Request(rid, payload, fut))
-        return fut
-
-    def close(self):
-        self._stop.set()
-        self.thread.join(timeout=2)
+from repro.serving.batching import Batcher, BucketedBatcher, Request  # noqa: F401  (re-export)
+from repro.serving.metrics import ServerMetrics
 
 
 class GBDTServer:
+    """Batched GBDT scoring service.
+
+    Every batch the batcher flushes is padded up to one of
+    ``batcher.buckets`` before it reaches the jitted predict function,
+    so the number of XLA traces is bounded by the bucket count — the
+    `metrics.recompiles` counter asserts this in tests.  The predict
+    configuration (strategy / backend / tree_block / Pallas block
+    shapes) is taken at construction and baked into the jitted closure.
+    """
+
     def __init__(self, ensemble: ObliviousEnsemble, *,
+                 strategy: str = "auto", backend: str = "auto",
+                 tree_block: int = 0,
+                 block_n: Optional[int] = None,
+                 block_t: Optional[int] = None,
                  mesh=None, max_batch: int = 256,
-                 max_wait_ms: float = 2.0):
+                 max_wait_ms: float = 2.0,
+                 buckets: Optional[Sequence[int]] = None,
+                 min_bucket: int = 16,
+                 name: str = "gbdt"):
         self.ensemble = ensemble
         self.mesh = mesh
-        self._jit = jax.jit(lambda x: predict.predict_proba(
-            self.ensemble, x, strategy="staged", backend="ref"))
+        self.strategy = strategy
+        self.backend = backend
+        self.metrics = ServerMetrics(name)
+
+        def _proba(x: jax.Array) -> jax.Array:
+            # Body runs only when jax traces (= compiles) a new shape;
+            # counting here counts exactly the recompiles.
+            self.metrics.note_trace()
+            return predict.predict_proba(
+                ensemble, x, strategy=strategy, backend=backend,
+                tree_block=tree_block, block_n=block_n, block_t=block_t)
+
+        self._jit = jax.jit(_proba)
 
         def serve(xs: np.ndarray) -> np.ndarray:
             x = jnp.asarray(xs, jnp.float32)
             if self.mesh is not None:
-                raw = predict.predict_sharded(self.ensemble, x, self.mesh)
+                raw = predict.predict_sharded(
+                    ensemble, x, self.mesh,
+                    strategy="staged" if strategy == "auto" else strategy)
                 return np.asarray(jax.nn.softmax(raw, axis=-1))
             return np.asarray(self._jit(x))
 
-        self.batcher = Batcher(serve, max_batch=max_batch,
-                               max_wait_ms=max_wait_ms)
+        self.batcher = BucketedBatcher(serve, max_batch=max_batch,
+                                       max_wait_ms=max_wait_ms,
+                                       buckets=buckets,
+                                       min_bucket=min_bucket,
+                                       metrics=self.metrics)
+        self._serve_padded = serve
+
+    @property
+    def buckets(self) -> tuple[int, ...]:
+        return self.batcher.buckets
 
     def predict(self, x: np.ndarray, timeout: float = 30.0) -> np.ndarray:
+        """Single request through the deadline batcher (blocking)."""
         fut = self.batcher.submit(0, np.asarray(x, np.float32))
         return fut.get(timeout=timeout)
 
+    def predict_batch(self, xs: np.ndarray) -> np.ndarray:
+        """Synchronous bulk scoring through the same bucketed jit path.
+
+        Oversized inputs are chunked at the largest bucket, so this
+        shares the compile cache with the online path no matter the
+        caller's array size.
+        """
+        xs = np.asarray(xs, np.float32)
+        if len(xs) == 0:
+            width = 2 if self.ensemble.n_outputs == 1 else \
+                self.ensemble.n_outputs
+            return np.zeros((0, width), np.float32)
+        top = self.buckets[-1]
+        out = [self.batcher._run_batch(xs[start:start + top])
+               for start in range(0, len(xs), top)]
+        return np.concatenate(out, axis=0)
+
     def close(self):
         self.batcher.close()
+
+
+class ModelRegistry:
+    """Several named GBDT ensembles served from one process.
+
+    Each model gets its own `GBDTServer` (own batcher thread, own
+    compile cache, own metrics); registry-level `metrics()` aggregates
+    the per-model snapshots for export.
+    """
+
+    def __init__(self, **default_server_kw: Any):
+        self._default_kw = default_server_kw
+        self._servers: dict[str, GBDTServer] = {}
+
+    def register(self, name: str, ensemble: ObliviousEnsemble,
+                 replace: bool = False, **server_kw: Any) -> GBDTServer:
+        if name in self._servers:
+            if not replace:
+                raise KeyError(f"model {name!r} already registered "
+                               "(pass replace=True to swap it)")
+            self._servers.pop(name).close()
+        kw = {**self._default_kw, **server_kw, "name": name}
+        server = GBDTServer(ensemble, **kw)
+        self._servers[name] = server
+        return server
+
+    def load(self, name: str, path, **server_kw: Any) -> GBDTServer:
+        return self.register(name, ObliviousEnsemble.load(path),
+                             **server_kw)
+
+    def get(self, name: str) -> GBDTServer:
+        if name not in self._servers:
+            raise KeyError(f"unknown model {name!r}; registered: "
+                           f"{sorted(self._servers)}")
+        return self._servers[name]
+
+    def names(self) -> list[str]:
+        return sorted(self._servers)
+
+    def predict(self, name: str, x: np.ndarray,
+                timeout: float = 30.0) -> np.ndarray:
+        return self.get(name).predict(x, timeout=timeout)
+
+    def predict_batch(self, name: str, xs: np.ndarray) -> np.ndarray:
+        return self.get(name).predict_batch(xs)
+
+    def metrics(self) -> dict[str, dict[str, Any]]:
+        return {n: s.metrics.snapshot() for n, s in self._servers.items()}
+
+    def unregister(self, name: str) -> None:
+        self._servers.pop(name).close()
+
+    def close(self) -> None:
+        for s in self._servers.values():
+            s.close()
+        self._servers.clear()
 
 
 class EmbeddingGBDTPipeline:

@@ -1,0 +1,83 @@
+"""Per-model serving metrics: throughput, latency percentiles, recompiles.
+
+Thread-safe counters + a bounded latency reservoir.  `note_trace()` is
+designed to be called from *inside* a jitted function body: jax runs the
+Python body only when it traces (i.e. on a cache miss), so the call
+counts exactly the recompiles — the quantity the bucketing layer exists
+to bound.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+
+class ServerMetrics:
+    MAX_LAT_SAMPLES = 8192
+
+    def __init__(self, name: str = "model"):
+        self.name = name
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+        self.requests = 0
+        self.batches = 0
+        self.padded_rows = 0
+        self.served_rows = 0
+        self.traces = 0
+        self._lat_s: list[float] = []
+        self._lat_seen = 0
+        self._rng = random.Random(0)
+
+    # -- recording ---------------------------------------------------------
+    def note_trace(self) -> None:
+        """Call from inside the jitted predict body: runs once per trace."""
+        with self._lock:
+            self.traces += 1
+
+    def note_batch(self, n_valid: int, n_padded: int,
+                   latency_s: float) -> None:
+        with self._lock:
+            self.batches += 1
+            self.requests += n_valid
+            self.served_rows += n_valid
+            self.padded_rows += n_padded - n_valid
+            # reservoir sampling: every batch has an equal chance of being
+            # in the percentile sample, so warmup compiles can't pin p99
+            self._lat_seen += 1
+            if len(self._lat_s) < self.MAX_LAT_SAMPLES:
+                self._lat_s.append(latency_s)
+            else:
+                j = self._rng.randrange(self._lat_seen)
+                if j < self.MAX_LAT_SAMPLES:
+                    self._lat_s[j] = latency_s
+
+    # -- reporting ---------------------------------------------------------
+    def snapshot(self) -> dict[str, Any]:
+        with self._lock:
+            dt = max(time.perf_counter() - self._t0, 1e-9)
+            lat = np.asarray(self._lat_s) * 1e3
+            pad_total = self.served_rows + self.padded_rows
+            return {
+                "model": self.name,
+                "requests": self.requests,
+                "batches": self.batches,
+                "recompiles": self.traces,
+                "requests_per_s": self.requests / dt,
+                "batch_p50_ms": float(np.percentile(lat, 50)) if lat.size
+                else 0.0,
+                "batch_p99_ms": float(np.percentile(lat, 99)) if lat.size
+                else 0.0,
+                "pad_overhead": (self.padded_rows / pad_total
+                                 if pad_total else 0.0),
+            }
+
+    def __repr__(self) -> str:
+        s = self.snapshot()
+        return (f"<ServerMetrics {s['model']}: {s['requests']} req "
+                f"{s['requests_per_s']:.0f}/s recompiles={s['recompiles']} "
+                f"p50={s['batch_p50_ms']:.1f}ms "
+                f"p99={s['batch_p99_ms']:.1f}ms>")

@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) on the system's invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this image")
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np

@@ -7,14 +7,14 @@ import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import configs
+from repro.compat import abstract_mesh
 from repro.distributed import sharding as shd
 from repro.models import transformer as tf
 
 
 def fake_mesh(shape=(16, 16), axes=("data", "model")):
-    devs = np.empty(shape, dtype=object)
     # AbstractMesh carries shape info without real devices
-    return jax.sharding.AbstractMesh(shape, axes)
+    return abstract_mesh(shape, axes)
 
 
 @pytest.mark.parametrize("arch", list(configs.ARCHS))

@@ -1,0 +1,125 @@
+"""Prepared-plan vs per-call-padding predictor benchmark.
+
+Measures the cost the compiled-plan API hoists out of the hot loop: the
+legacy kwarg path (`core.predict.raw_predict`) re-resolves the backend,
+re-runs the block tuner and re-pads the model arrays on every call,
+while `Predictor.build` does all of that once and then dispatches
+through a shape-cached jitted entry.
+
+Three rows (ref backend, so kernel math is identical and the delta is
+pure per-call preparation + dispatch):
+
+  kwarg       eager legacy path, per-call preparation
+  kwarg-jit   legacy path under a caller-side jax.jit (the old
+              "fast" pattern every call site had to hand-roll)
+  prepared    Predictor built once, plan.raw per call
+
+Emits the same ``name,us_per_call,derived`` CSV rows as benchmarks.run.
+With ``--check`` the process exits nonzero unless the prepared path is
+at least at parity with the *best* legacy row — the CI gate for the
+plan API never regressing below the kwarg path it replaced.
+
+  PYTHONPATH=src python -m benchmarks.predictor_bench [--quick] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+
+def eprint(*a):
+    print(*a, file=sys.stderr, flush=True)
+
+
+def run(n_trees: int, batch: int, iters: int) -> dict[str, float]:
+    import functools
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.serving_bench import _build_model
+    from repro.core import predict
+    from repro.core.predictor import PredictConfig, Predictor
+
+    ens, ds = _build_model(n_trees)
+    xs = np.asarray(ds.x_test, np.float32)
+    while len(xs) < batch:
+        xs = np.concatenate([xs, xs])
+    x = jnp.asarray(xs[:batch])
+
+    kwarg = functools.partial(predict.raw_predict, ens,
+                              strategy="staged", backend="ref")
+    kwarg_jit = jax.jit(functools.partial(predict.raw_predict, ens,
+                                          strategy="staged", backend="ref"))
+    plan = Predictor.build(ens, PredictConfig(strategy="staged",
+                                              backend="ref"),
+                           expected_batch=batch)
+    paths = {"kwarg": kwarg, "kwarg-jit": kwarg_jit, "prepared": plan.raw}
+
+    # Interleave the paths round-robin so machine drift (shared CI
+    # boxes) hits all of them equally; per-path medians over rounds.
+    times: dict[str, list[float]] = {name: [] for name in paths}
+    for fn in paths.values():
+        jax.block_until_ready(fn(x))            # warm compile caches
+    for _ in range(iters):
+        for name, fn in paths.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            times[name].append(time.perf_counter() - t0)
+    out = {name: float(np.median(ts)) for name, ts in times.items()}
+    # per-round ratio vs the jitted legacy path, for the parity gate:
+    # pairing within a round cancels drift a sequential comparison keeps
+    out["parity_ratio"] = float(np.median(
+        [k / p for k, p in zip(times["kwarg-jit"], times["prepared"])]))
+    # correctness guard: all three paths are the same math
+    np.testing.assert_allclose(np.asarray(kwarg(x)),
+                               np.asarray(plan.raw(x)),
+                               rtol=1e-5, atol=1e-5)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if prepared path is below parity with "
+                         "the best legacy path")
+    ap.add_argument("--batch", type=int, default=256)
+    args = ap.parse_args()
+
+    n_trees = 30 if args.quick else 100
+    iters = 10 if args.quick else 30
+    batch = min(args.batch, 64) if args.quick else args.batch
+
+    res = run(n_trees, batch, iters)
+    # parity gate on the median per-round prepared-vs-jitted-legacy
+    # ratio; >= 0.66 (prepared within 1.5x) tolerates dispatch jitter on
+    # loaded CI boxes while still catching a reintroduced per-call model
+    # pad (that costs whole multiples, not fractions)
+    parity = res["parity_ratio"] >= 0.66
+
+    eprint(f"# predictor bench: batch={batch}, {n_trees} trees, "
+           f"{iters} interleaved rounds, ref backend")
+    for name in ("kwarg", "kwarg-jit", "prepared"):
+        eprint(f"{name:10s} {res[name] * 1e6:10.1f} us/call "
+               f"({res['kwarg'] / res[name]:5.2f}x vs kwarg)")
+    eprint(f"prepared vs jitted legacy (median per-round ratio): "
+           f"{res['parity_ratio']:.2f}x "
+           f"({'parity OK' if parity else 'BELOW PARITY'})")
+
+    print("name,us_per_call,derived")
+    for name in ("kwarg", "kwarg-jit", "prepared"):
+        print(f"predictor/{name},{res[name] * 1e6:.1f},"
+              f"speedup_vs_kwarg={res['kwarg'] / res[name]:.2f}")
+
+    if args.check and not parity:
+        eprint("FAIL: prepared plan slower than the kwarg path it replaces")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,9 +51,12 @@ def _request_sizes(n_batches: int, max_batch: int,
 
 def bench_config(label: str, ens, xs: np.ndarray, sizes: list[int],
                  buckets, max_batch: int) -> dict:
+    from repro.core.predictor import PredictConfig
     from repro.serving.engine import GBDTServer
 
-    server = GBDTServer(ens, strategy="staged", backend="ref",
+    server = GBDTServer(ens,
+                        config=PredictConfig(strategy="staged",
+                                             backend="ref"),
                         max_batch=max_batch, buckets=buckets,
                         name=label)
     lat = []

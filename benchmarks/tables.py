@@ -15,16 +15,15 @@ execute, which interpret-mode tests pin to the oracle).
 """
 from __future__ import annotations
 
-import functools
-
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from benchmarks import scalar_baseline as sb
 from benchmarks.common import Table, time_fn
-from repro.core import boosting, knn, losses, predict, quantize
+from repro.core import boosting, knn, losses, quantize
 from repro.core.boosting import BoostingParams
+from repro.core.predictor import PredictConfig, Predictor
 from repro.data import synthetic
 from repro.kernels import ops, ref
 
@@ -132,18 +131,18 @@ def table5_full(scale=0.02) -> Table:
         ens, loss, _ = _train_model(ds, n_trees)
         xj = jnp.asarray(ds.x_test if name != "image_embeddings" else x_te)
 
-        jpred = jax.jit(functools.partial(predict.raw_predict,
-                                          strategy="staged", backend="ref"))
+        plan = Predictor.build(ens, PredictConfig(strategy="staged",
+                                                  backend="ref"))
         base_s = time_fn(
             lambda: sb.predict_scalar(xj[:512], ens.borders,
                                       ens.split_features, ens.split_bins,
                                       ens.leaf_values), iters=1)
-        opt_s = time_fn(jpred, ens, xj[:512])
+        opt_s = time_fn(plan.raw, xj[:512])
         # accuracy parity: baseline scalar vs optimized must agree exactly
         raw_b = np.asarray(sb.predict_scalar(
             xj[:512], ens.borders, ens.split_features, ens.split_bins,
             ens.leaf_values))
-        raw_o = np.asarray(jpred(ens, xj[:512])
+        raw_o = np.asarray(plan.raw(xj[:512])
                            - ens.base_score[None, :])
         parity = np.max(np.abs(raw_b - raw_o))
         assert parity < 1e-4, f"{name}: baseline/optimized diverge {parity}"
@@ -162,13 +161,13 @@ def table6_batch_scaling(n_trees=300) -> Table:
     ens, _, _ = _train_model(ds, n_trees)
     t = Table("table6_batch_scaling")
     xj = jnp.asarray(ds.x_test)
-    jpred = jax.jit(functools.partial(predict.raw_predict,
-                                      strategy="staged", backend="ref"))
+    plan = Predictor.build(ens, PredictConfig(strategy="staged",
+                                              backend="ref"))
     for bs in (1, 8, 64, 512):
         base = time_fn(lambda: sb.predict_scalar(
             xj[:bs], ens.borders, ens.split_features, ens.split_bins,
             ens.leaf_values), iters=2)
-        opt = time_fn(jpred, ens, xj[:bs], iters=3)
+        opt = time_fn(plan.raw, xj[:bs], iters=3)
         t.add(f"batch_{bs}", 1, base, opt)
     return t
 

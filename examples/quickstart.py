@@ -1,13 +1,14 @@
-"""Quickstart: train a CatBoost-style GBDT in JAX, predict with the
-vectorized pipeline, verify against the scalar reference.
+"""Quickstart: train a CatBoost-style GBDT in JAX, build a compiled
+prediction plan, verify the strategies against each other.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import boosting, losses, predict
+from repro.core import boosting, losses
 from repro.core.boosting import BoostingParams
+from repro.core.predictor import PredictConfig, Predictor
 from repro.data import synthetic
 
 
@@ -24,17 +25,23 @@ def main():
     print(f"final train loss {hist['train_loss'][-1]:.4f} "
           f"metric {hist['final_metric']:.4f}")
 
+    # Build the plan once (auto resolved to a concrete strategy/backend,
+    # model arrays padded once); every predict reuses it.
+    plan = Predictor.build(ens)
+    print(f"plan: {plan.config}")
+
     x_test = jnp.asarray(ds.x_test)
-    pred = predict.predict_class(ens, x_test)
+    pred = plan.classify(x_test)
     acc = float((np.asarray(pred) == ds.y_test).mean())
     print(f"test accuracy: {acc:.4f}")
 
     # strategies must agree (paper's x86-vs-RISC-V parity check analog)
-    staged = predict.raw_predict(ens, x_test[:64], strategy="staged",
-                                 backend="ref")
-    fused = predict.raw_predict(ens, x_test[:64], strategy="fused",
-                                backend="ref")
-    err = float(jnp.max(jnp.abs(staged - fused)))
+    staged = Predictor.build(ens, PredictConfig(strategy="staged",
+                                                backend="ref"))
+    fused = Predictor.build(ens, PredictConfig(strategy="fused",
+                                               backend="ref"))
+    err = float(jnp.max(jnp.abs(staged.raw(x_test[:64])
+                                - fused.raw(x_test[:64]))))
     print(f"staged vs fused max deviation: {err:.2e}  "
           f"({'OK' if err < 1e-4 else 'MISMATCH'})")
 

@@ -3,9 +3,10 @@
 production shape of that finding).
 
 Concurrent clients hit the deadline batcher; flushed batches are padded
-to power-of-two buckets so the jitted predict path compiles at most
-once per bucket (see docs/serving.md).  Strategy/backend are
-configurable: --strategy fused runs the single-pass Pallas kernel path.
+to power-of-two buckets so the compiled plan traces at most once per
+bucket (see docs/serving.md).  The server builds one `Predictor` from a
+`PredictConfig` at construction: --strategy fused runs the single-pass
+Pallas kernel path.
 
 Run:  PYTHONPATH=src python examples/serve_gbdt.py [--strategy fused]
 """
@@ -18,6 +19,7 @@ import numpy as np
 
 from repro.core import boosting, losses
 from repro.core.boosting import BoostingParams
+from repro.core.predictor import PredictConfig
 from repro.data import synthetic
 from repro.serving.engine import GBDTServer
 
@@ -37,10 +39,10 @@ def main():
     ens, _ = boosting.fit(ds.x_train, ds.y_train, loss=loss,
                           params=BoostingParams(n_trees=100, depth=2,
                                                 learning_rate=0.1))
-    server = GBDTServer(ens, strategy=args.strategy, backend=args.backend,
-                        max_batch=128, max_wait_ms=3.0, name="santander")
-    print(f"strategy={args.strategy} backend={args.backend} "
-          f"buckets={server.buckets}")
+    config = PredictConfig(strategy=args.strategy, backend=args.backend)
+    server = GBDTServer(ens, config=config, max_batch=128,
+                        max_wait_ms=3.0, name="santander")
+    print(f"plan: {server.config} buckets={server.buckets}")
 
     n_clients, per_client = args.clients, args.per_client
     lat: list[float] = []

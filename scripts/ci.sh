@@ -42,4 +42,9 @@ python examples/quickstart.py
 echo "== serving benchmark (quick) =="
 python -m benchmarks.serving_bench --quick >/dev/null
 
+echo "== predictor smoke benchmark (prepared plan vs per-call padding) =="
+# --check fails the build if the prepared-plan path is below parity
+# with the kwarg path it replaced (ref backend, so same kernel math).
+python -m benchmarks.predictor_bench --quick --check >/dev/null
+
 echo "CI OK"

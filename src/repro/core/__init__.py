@@ -1,6 +1,10 @@
 """Core: the paper's contribution — vectorized oblivious-tree GBDT in JAX.
 
-Prediction pipeline (paper fig. 1) lives in `predict`; training substrate
-in `boosting`; model structure in `trees`; KNN embedding features in `knn`.
+Compiled-plan prediction lives in `predictor` (`PredictConfig` +
+`Predictor`, the prepare-once API); `predict` keeps the legacy kwarg
+shims.  Training substrate in `boosting`; model structure in `trees`;
+KNN embedding features in `knn`.
 """
-from repro.core import boosting, knn, losses, predict, quantize, trees  # noqa: F401
+from repro.core import (boosting, knn, losses, predict, predictor,  # noqa: F401
+                        quantize, trees)
+from repro.core.predictor import PredictConfig, Predictor  # noqa: F401

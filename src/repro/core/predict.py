@@ -1,34 +1,47 @@
-"""Vectorized GBDT prediction — the paper's contribution as a JAX module.
+"""Functional GBDT prediction — thin shims over `core.predictor`.
+
+.. deprecated::
+    The kwarg-threaded functions here (`raw_predict` & co. with
+    `strategy=` / `backend=` / `tree_block=` / `block_n=` / `block_t=`)
+    build a throwaway one-shot plan per call: the model arrays are
+    re-padded and the block tuner re-run every time.  They keep every
+    old signature working, but new code — and anything that predicts
+    more than once per model — should build the plan once:
+
+        from repro.core.predictor import PredictConfig, Predictor
+        plan = Predictor.build(ensemble, PredictConfig(strategy="fused"))
+        plan.raw(x); plan.proba(x); plan.classify(x)
+        plan.sharded(mesh)(x)
+
+    See docs/api.md for the migration table.
 
 Pipeline (paper fig. 1): BinarizeFeatures -> CalcTreesBlockedImpl
 { CalcIndexesBasic -> CalculateLeafValues[Multi] } with every stage mapped
-to a kernel op.  Three execution strategies:
-
-  staged  — paper-faithful: three separate passes (binarize, leaf index,
-            leaf gather), each vectorized.  Tree blocking mirrors
-            CalcTreesBlockedImpl.
-  fused   — beyond-paper: single fused Pallas pass (see kernels/fused_predict).
-  auto    — fused on TPU, staged-ref on CPU.
-
-`predict_sharded` distributes over a device mesh: samples over the data
-axes, trees over the model axis with a final psum — GBDT's tree sum is
-embarrassingly reducible, which is what makes the model-parallel axis
-useful for very large ensembles (10k trees x 256 leaves x 20 classes is
-a ~200 MB model; sharding trees keeps it VMEM-friendly per shard).
+to a kernel op.  Strategies: staged (paper-faithful three passes), fused
+(single Pallas pass), auto (fused on TPU, staged-ref on CPU).
 """
 from __future__ import annotations
-
-import functools
-from typing import Literal
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.predictor import (PredictConfig, Predictor, Strategy,
+                                  classify_from_raw, proba_from_raw)
 from repro.core.trees import ObliviousEnsemble
-from repro.kernels import ops
 
-Strategy = Literal["auto", "staged", "fused"]
+
+def _one_shot(ensemble: ObliviousEnsemble, x: jax.Array, strategy, backend,
+              tree_block, block_n, block_t) -> Predictor:
+    """One-shot plan for the legacy kwarg path.  Per-call preparation is
+    exactly what `Predictor.build` exists to hoist — acceptable here
+    because this shim is documented as the slow compatibility path."""
+    return Predictor.build(
+        ensemble,
+        PredictConfig(strategy=strategy, backend=backend,
+                      tree_block=tree_block, block_n=block_n,
+                      block_t=block_t),
+        expected_batch=x.shape[0])
 
 
 def raw_predict(ensemble: ObliviousEnsemble, x: jax.Array, *,
@@ -39,47 +52,24 @@ def raw_predict(ensemble: ObliviousEnsemble, x: jax.Array, *,
                 block_t: int | None = None) -> jax.Array:
     """(N, F) float32 -> (N, C) float32 raw scores (sum over trees).
 
-    block_n/block_t override the fused kernel's Pallas block shapes;
-    left as None they are autotuned per ensemble by `kernels.tuning`.
+    Deprecated kwarg path — see the module docstring; prefer
+    `Predictor.build(...).raw(x)`.
     """
-    if strategy == "auto":
-        strategy = "fused" if jax.default_backend() == "tpu" else "staged"
-    base = ensemble.base_score[None, :]
-    if strategy == "fused":
-        return base + ops.fused_predict(
-            x, ensemble.borders, ensemble.split_features,
-            ensemble.split_bins, ensemble.leaf_values, backend=backend,
-            block_n=block_n, block_t=block_t)
-    bins = ops.binarize(x, ensemble.borders, backend=backend)
-    if tree_block and ensemble.n_trees > tree_block:
-        # Paper-faithful CalcTreesBlockedImpl: process trees in blocks so the
-        # (leaf_values, idx) working set stays cache/VMEM resident.
-        acc = jnp.zeros((x.shape[0], ensemble.n_outputs), jnp.float32)
-        for start in range(0, ensemble.n_trees, tree_block):
-            blk = ensemble.slice_trees(start, min(start + tree_block,
-                                                  ensemble.n_trees))
-            idx = ops.leaf_index(bins, blk.split_features, blk.split_bins,
-                                 backend=backend)
-            acc = acc + ops.leaf_gather(idx, blk.leaf_values, backend=backend)
-        return base + acc
-    idx = ops.leaf_index(bins, ensemble.split_features, ensemble.split_bins,
-                         backend=backend)
-    return base + ops.leaf_gather(idx, ensemble.leaf_values, backend=backend)
+    plan = _one_shot(ensemble, x, strategy, backend, tree_block,
+                     block_n, block_t)
+    return plan.raw_uncached(x)
 
 
 def predict_proba(ensemble: ObliviousEnsemble, x: jax.Array, **kw) -> jax.Array:
-    raw = raw_predict(ensemble, x, **kw)
-    if ensemble.n_outputs == 1:
-        p = jax.nn.sigmoid(raw[:, 0])
-        return jnp.stack([1.0 - p, p], axis=1)
-    return jax.nn.softmax(raw, axis=-1)
+    """Deprecated kwarg path; prefer `Predictor.build(...).proba(x)`."""
+    return proba_from_raw(raw_predict(ensemble, x, **kw),
+                          ensemble.n_outputs)
 
 
 def predict_class(ensemble: ObliviousEnsemble, x: jax.Array, **kw) -> jax.Array:
-    raw = raw_predict(ensemble, x, **kw)
-    if ensemble.n_outputs == 1:
-        return (raw[:, 0] > 0.0).astype(jnp.int32)
-    return jnp.argmax(raw, axis=-1).astype(jnp.int32)
+    """Deprecated kwarg path; prefer `Predictor.build(...).classify(x)`."""
+    return classify_from_raw(raw_predict(ensemble, x, **kw),
+                             ensemble.n_outputs)
 
 
 # --------------------------------------------------------------------------
@@ -90,28 +80,18 @@ def predict_sharded(ensemble: ObliviousEnsemble, x: jax.Array, mesh,
                     strategy: Strategy = "staged") -> jax.Array:
     """Data-parallel over samples, tree-parallel over the model axis.
 
-    Tree shards compute partial sums; a single psum over the model axis
-    yields the ensemble total.  in/out shardings are explicit so this
-    lowers cleanly on the production meshes.
+    Deprecated one-shot path: the plan (and its shard_map closure) is
+    rebuilt on every call.  Prefer holding a
+    `Predictor.build(...).sharded(mesh)` callable, which is built once
+    and cached on the plan.  `prepare=False`: only the per-shard locals
+    inside the shard_map body prepare model arrays — the throwaway
+    plan's own copy would never be read.
     """
-    from repro.compat import shard_map
-
-    dp = P(data_axes)
-    tree_p = P(model_axis)
-
-    def _local(sf, sb, lv, borders, xs):
-        local = ObliviousEnsemble(sf, sb, lv, borders, ensemble.n_borders)
-        part = raw_predict(local, xs, strategy=strategy)
-        return jax.lax.psum(part, model_axis)  # base added by caller
-
-    fn = shard_map(
-        _local, mesh=mesh,
-        in_specs=(tree_p, tree_p, tree_p, P(), dp),
-        out_specs=dp,
-    )
-    return ensemble.base_score[None, :] + fn(
-        ensemble.split_features, ensemble.split_bins,
-        ensemble.leaf_values, ensemble.borders, x)
+    plan = Predictor.build(ensemble,
+                           PredictConfig(strategy=strategy, backend="auto"),
+                           prepare=False)
+    return plan.sharded(mesh, data_axes=data_axes,
+                        model_axis=model_axis)(x)
 
 
 def shard_inputs(x: jax.Array, mesh, data_axes=("data",)) -> jax.Array:

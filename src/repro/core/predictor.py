@@ -1,0 +1,576 @@
+"""Compiled-plan GBDT evaluation: prepare the model once, predict many.
+
+The paper's speedups come from hoisting everything that does not depend
+on the incoming batch out of the hot loop: CatBoost's evaluator prepares
+quantized borders and a blocked tree layout once, then runs a tight
+vectorized loop per batch.  The kwarg-threaded `core.predict.raw_predict`
+path re-did that preparation on every call — re-resolving `auto`
+strategy/backend, re-running the block tuner, and re-padding the *model*
+arrays (borders, splits, leaf values) to block multiples inside each
+predict.  This module is the prepare-once counterpart:
+
+  config = PredictConfig(strategy="fused", backend="pallas")
+  plan   = Predictor.build(ensemble, config)   # resolve + pad ONCE
+  plan.raw(x)       # (N, C) raw scores — jitted, cached per batch shape
+  plan.proba(x)     # class probabilities
+  plan.classify(x)  # argmax / threshold
+  plan.sharded(mesh)(x)   # mesh-distributed raw scores
+
+`Predictor.build` resolves `auto` choices to concrete ones (backend from
+the — cached — platform query, fused block shapes from `kernels.tuning`),
+pads the model arrays to block multiples exactly once, and caches jitted
+entry points; with bucketed serving batches the number of XLA compiles
+is bounded by (entry points x batch buckets).  The kwarg API in
+`core.predict` remains as a thin one-shot shim over this class.
+
+`from_catboost_json` ingests CatBoost's exported oblivious-tree JSON
+(`model.save_model(f, format="json")`): per-feature borders, split
+feature/border per depth, flat leaf values — the real-model workload the
+paper benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import threading
+from typing import Any, Callable, Literal, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.trees import ObliviousEnsemble
+from repro.kernels import ops
+from repro.kernels import tuning
+from repro.kernels.ops import PAD_SPLIT_BIN
+
+Strategy = Literal["auto", "staged", "fused"]
+Backend = Literal["auto", "pallas", "ref"]
+
+_STRATEGIES = ("auto", "staged", "fused")
+_BACKENDS = ("auto", "pallas", "ref")
+
+# T-axis alignment of the prepadded staged path (the leaf_index /
+# leaf_gather kernels' default tree block).
+STAGED_TREE_ALIGN = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictConfig:
+    """Validated prediction-plan configuration.
+
+    `auto` fields are placeholders resolved at plan-build time by
+    `resolve()`; a built `Predictor` only ever holds concrete values, so
+    nothing downstream re-queries the platform or the tuner per call.
+
+      strategy   staged (paper three-pass) | fused (single Pallas pass)
+      backend    pallas (real kernels; interpret on CPU) | ref (pure jnp)
+      tree_block staged-path tree blocking (CalcTreesBlockedImpl); 0 = off
+      block_n/t  fused-kernel Pallas block shapes; None = autotuned
+    """
+    strategy: Strategy = "auto"
+    backend: Backend = "auto"
+    tree_block: int = 0
+    block_n: Optional[int] = None
+    block_t: Optional[int] = None
+
+    def __post_init__(self):
+        if self.strategy not in _STRATEGIES:
+            raise ValueError(f"strategy must be one of {_STRATEGIES}, "
+                             f"got {self.strategy!r}")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, "
+                             f"got {self.backend!r}")
+        if not isinstance(self.tree_block, int) or self.tree_block < 0:
+            raise ValueError(f"tree_block must be an int >= 0, "
+                             f"got {self.tree_block!r}")
+        for name in ("block_n", "block_t"):
+            v = getattr(self, name)
+            if v is not None and (not isinstance(v, int) or v < 1):
+                raise ValueError(f"{name} must be a positive int or None, "
+                                 f"got {v!r}")
+
+    @property
+    def is_resolved(self) -> bool:
+        return (self.strategy != "auto" and self.backend != "auto"
+                and (self.strategy != "fused"
+                     or (self.block_n is not None
+                         and self.block_t is not None)))
+
+    def resolve(self, ensemble: ObliviousEnsemble, *,
+                n_rows: Optional[int] = None) -> "PredictConfig":
+        """Concretize every `auto` choice for one ensemble.
+
+        Platform is read once per process (`ops.default_platform`);
+        fused block shapes come from the VMEM footprint model in
+        `kernels.tuning`, sized to this ensemble (and `n_rows`, the
+        expected batch size, when known).
+        """
+        strategy, backend = self.strategy, self.backend
+        if strategy == "auto":
+            strategy = "fused" if ops.default_platform() == "tpu" \
+                else "staged"
+        if backend == "auto":
+            backend = "pallas" if ops.default_platform() == "tpu" else "ref"
+        block_n, block_t = self.block_n, self.block_t
+        if strategy == "fused" and (block_n is None or block_t is None):
+            tn, tt = tuning.best_fused_blocks(
+                ensemble.n_features, ensemble.depth,
+                ensemble.leaf_values.shape[1], ensemble.n_outputs,
+                ensemble.borders.shape[0], n_rows=n_rows,
+                n_trees=ensemble.n_trees)
+            block_n = block_n or tn
+            block_t = block_t or tt
+        return dataclasses.replace(self, strategy=strategy, backend=backend,
+                                   block_n=block_n, block_t=block_t)
+
+
+@dataclasses.dataclass(frozen=True)
+class _PreparedModel:
+    """Model arrays in plan layout.
+
+    For the pallas backend they are padded to block multiples (F to the
+    lane width with +inf borders, T to the tree block with no-op trees);
+    for ref they are the original arrays — ref kernels take any shape,
+    so padding would only add wasted math.
+    """
+    borders: jax.Array         # (B, Fp) f32
+    split_features: jax.Array  # (Tp, D) i32
+    split_bins: jax.Array      # (Tp, D) i32
+    leaf_values: jax.Array     # (Tp, L, C) f32
+    # staged tree blocking: per-block (sf, sb, lv) slices, pre-cut and
+    # pre-padded at build time so the per-call loop never touches jnp.pad
+    tree_blocks: Optional[tuple] = None
+
+
+def proba_from_raw(raw: jax.Array, n_outputs: int) -> jax.Array:
+    """Raw scores -> class probabilities: two-column sigmoid for binary
+    models, softmax otherwise.  The single definition every predict
+    surface (plan entries, kwarg shims, mesh serving) shares."""
+    if n_outputs == 1:
+        p = jax.nn.sigmoid(raw[:, 0])
+        return jnp.stack([1.0 - p, p], axis=1)
+    return jax.nn.softmax(raw, axis=-1)
+
+
+def classify_from_raw(raw: jax.Array, n_outputs: int) -> jax.Array:
+    """Raw scores -> int32 class ids: zero threshold for binary models,
+    argmax otherwise (single definition, like `proba_from_raw`)."""
+    if n_outputs == 1:
+        return (raw[:, 0] > 0.0).astype(jnp.int32)
+    return jnp.argmax(raw, axis=-1).astype(jnp.int32)
+
+
+def _prepare_model(ensemble: ObliviousEnsemble,
+                   cfg: PredictConfig) -> tuple[_PreparedModel, int]:
+    """The one-time model-side padding `Predictor.build` hoists.
+
+    Returns the prepared arrays plus the number of model pad ops spent,
+    counted locally (the global `ops.pad_stats` counter may tick from
+    other threads concurrently).
+    """
+    pallas = cfg.backend == "pallas"
+    t_align = cfg.block_t if cfg.strategy == "fused" else STAGED_TREE_ALIGN
+    n_pads = 0
+
+    def pad(a, axis, target, value=0):
+        nonlocal n_pads
+        out = ops._pad_dim(a, axis, target, value=value, kind="model")
+        if out is not a:
+            n_pads += 1
+        return out
+
+    def pad_tree_arrays(sf, sb, lv):
+        if not pallas:
+            return sf, sb, lv
+        tp = ops._round_up(max(sf.shape[0], 1), t_align)
+        return (pad(sf, 0, tp), pad(sb, 0, tp, value=PAD_SPLIT_BIN),
+                pad(lv, 0, tp))
+
+    borders = ensemble.borders
+    if pallas:
+        fp = ops._round_up(max(ensemble.n_features, 1), ops.FEATURE_ALIGN)
+        borders = pad(borders, 1, fp, value=np.float32(np.inf))
+
+    if (cfg.strategy == "staged" and cfg.tree_block
+            and ensemble.n_trees > cfg.tree_block):
+        blocks = []
+        for start in range(0, ensemble.n_trees, cfg.tree_block):
+            blk = ensemble.slice_trees(
+                start, min(start + cfg.tree_block, ensemble.n_trees))
+            blocks.append(pad_tree_arrays(blk.split_features,
+                                          blk.split_bins, blk.leaf_values))
+        # the blocked path never reads the whole-ensemble arrays, so keep
+        # the (unpadded) originals rather than holding a second padded
+        # copy of the full model
+        return _PreparedModel(borders, ensemble.split_features,
+                              ensemble.split_bins, ensemble.leaf_values,
+                              tuple(blocks)), n_pads
+
+    sf, sb, lv = pad_tree_arrays(ensemble.split_features,
+                                 ensemble.split_bins, ensemble.leaf_values)
+    return _PreparedModel(borders, sf, sb, lv, None), n_pads
+
+
+class Predictor:
+    """A compiled prediction plan for one ensemble.
+
+    Construct with `Predictor.build(...)` (or `from_catboost_json`).
+    The plan owns:
+      * a fully resolved `PredictConfig` (no `auto` left)
+      * the model arrays, padded to block multiples exactly once
+      * jitted `raw` / `proba` / `classify` entry points whose compile
+        cache is keyed by batch shape — with bucketed serving batches,
+        compiles are bounded by (entries used x buckets)
+    The plan is immutable: if the underlying ensemble changes, build a
+    new `Predictor` (see `serving.engine.ModelRegistry.register`).
+    """
+
+    def __init__(self, ensemble: ObliviousEnsemble, config: PredictConfig,
+                 prepared: Optional[_PreparedModel], *,
+                 on_trace: Optional[Callable[[], None]] = None,
+                 build_model_pads: int = 0):
+        if not config.is_resolved:
+            raise ValueError("Predictor requires a resolved PredictConfig; "
+                             "use Predictor.build()")
+        self.ensemble = ensemble
+        self.config = config
+        self._prepared_model = prepared
+        self._on_trace = on_trace
+        self._build_model_pads = build_model_pads
+        self._lock = threading.Lock()
+        self._traces: dict[str, int] = {}
+        self._entry_shapes: set[tuple] = set()
+        self._sharded_cache: dict[tuple, Callable] = {}
+        self._entries = {
+            "raw": self._make_entry("raw", self._raw_impl),
+            "proba": self._make_entry("proba", self._proba_impl),
+            "classify": self._make_entry("classify", self._classify_impl),
+        }
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def build(cls, ensemble: ObliviousEnsemble,
+              config: Optional[PredictConfig] = None, *,
+              expected_batch: Optional[int] = None,
+              on_trace: Optional[Callable[[], None]] = None,
+              prepare: bool = True,
+              **config_kw: Any) -> "Predictor":
+        """Resolve the config and prepare the model — the only place any
+        per-ensemble preparation happens.
+
+        `expected_batch` feeds the fused block tuner's padding-waste
+        penalty (serving passes its largest bucket).  `config_kw` is a
+        convenience for `Predictor.build(ens, strategy="fused")` style
+        calls; it cannot be combined with an explicit `config`.
+        `prepare=False` defers the model-side padding to the first local
+        predict — for plans used only through `sharded(mesh)`, which
+        prepares per tree shard and would never read the local copy.
+        """
+        if config is None:
+            config = PredictConfig(**config_kw)
+        elif config_kw:
+            raise TypeError("pass either a PredictConfig or config kwargs, "
+                            f"not both: {sorted(config_kw)}")
+        resolved = config.resolve(ensemble, n_rows=expected_batch)
+        prepared, pads = (_prepare_model(ensemble, resolved) if prepare
+                          else (None, 0))
+        return cls(ensemble, resolved, prepared, on_trace=on_trace,
+                   build_model_pads=pads)
+
+    @classmethod
+    def from_catboost_json(cls, path: str | pathlib.Path,
+                           config: Optional[PredictConfig] = None,
+                           **build_kw: Any) -> "Predictor":
+        """Build a plan straight from a CatBoost JSON model export."""
+        return cls.build(load_catboost_json(path), config, **build_kw)
+
+    # -- plan internals ----------------------------------------------------
+    def _note_trace(self, name: str) -> None:
+        with self._lock:
+            self._traces[name] = self._traces.get(name, 0) + 1
+        if self._on_trace is not None:
+            self._on_trace()
+
+    def _make_entry(self, name: str, impl: Callable) -> Callable:
+        def traced(x):
+            # Body runs only when jax traces a new shape; counting here
+            # counts exactly the XLA compiles for this entry point (and
+            # keeps shape bookkeeping off the cached-dispatch hot path).
+            self._note_trace(name)
+            with self._lock:
+                self._entry_shapes.add((name,) + tuple(x.shape))
+            return impl(x)
+        return jax.jit(traced)
+
+    def _ensure_prepared(self) -> _PreparedModel:
+        """Model prep for a `prepare=False` plan, eagerly (never inside a
+        trace: the pads must run once, not once per compile)."""
+        p = self._prepared_model
+        if p is None:
+            with self._lock:
+                p = self._prepared_model
+                if p is None:
+                    p, pads = _prepare_model(self.ensemble, self.config)
+                    self._prepared_model = p
+                    self._build_model_pads = pads
+        return p
+
+    def _raw_impl(self, x: jax.Array) -> jax.Array:
+        cfg, p = self.config, self._prepared_model
+        base = self.ensemble.base_score[None, :]
+        if cfg.strategy == "fused":
+            return base + ops.fused_predict_prepadded(
+                x, p.borders, p.split_features, p.split_bins, p.leaf_values,
+                backend=cfg.backend, block_n=cfg.block_n,
+                block_t=cfg.block_t)
+        bins = ops.binarize_prepadded(x, p.borders, backend=cfg.backend)
+        if p.tree_blocks is not None:
+            # CalcTreesBlockedImpl with the block slices cut at build time
+            acc = jnp.zeros((x.shape[0], self.ensemble.n_outputs),
+                            jnp.float32)
+            for sf, sb, lv in p.tree_blocks:
+                idx = ops.leaf_index_prepadded(bins, sf, sb,
+                                               backend=cfg.backend)
+                acc = acc + ops.leaf_gather_prepadded(idx, lv,
+                                                      backend=cfg.backend)
+            return base + acc
+        idx = ops.leaf_index_prepadded(bins, p.split_features, p.split_bins,
+                                       backend=cfg.backend)
+        return base + ops.leaf_gather_prepadded(idx, p.leaf_values,
+                                                backend=cfg.backend)
+
+    def _proba_impl(self, x: jax.Array) -> jax.Array:
+        return proba_from_raw(self._raw_impl(x), self.ensemble.n_outputs)
+
+    def _classify_impl(self, x: jax.Array) -> jax.Array:
+        return classify_from_raw(self._raw_impl(x),
+                                 self.ensemble.n_outputs)
+
+    def _call(self, name: str, x) -> jax.Array:
+        if self._prepared_model is None:
+            self._ensure_prepared()
+        if not (isinstance(x, jax.Array) and x.dtype == jnp.float32):
+            x = jnp.asarray(x, jnp.float32)   # skip no-op asarray dispatch
+        return self._entries[name](x)
+
+    # -- public entry points -----------------------------------------------
+    def raw(self, x) -> jax.Array:
+        """(N, F) -> (N, C) raw scores (tree sum + base score)."""
+        return self._call("raw", x)
+
+    def proba(self, x) -> jax.Array:
+        """(N, F) -> (N, max(C, 2)) class probabilities."""
+        return self._call("proba", x)
+
+    def classify(self, x) -> jax.Array:
+        """(N, F) -> (N,) int32 class ids."""
+        return self._call("classify", x)
+
+    def raw_uncached(self, x) -> jax.Array:
+        """Un-jitted raw scores — for callers that bring their own jit
+        (the `core.predict` shim, shard_map bodies)."""
+        self._ensure_prepared()
+        return self._raw_impl(jnp.asarray(x, jnp.float32))
+
+    def sharded(self, mesh, *, data_axes: Sequence[str] = ("data",),
+                model_axis: str = "model",
+                strategy: Optional[str] = None
+                ) -> Callable[[jax.Array], jax.Array]:
+        """Mesh-distributed raw scores: samples over `data_axes`, trees
+        over `model_axis` with a psum combine.  The shard_map closure is
+        built once per (mesh, axes, strategy) and cached on the plan.
+
+        `strategy` overrides the plan's strategy for the per-shard local
+        predict (serving forces `staged` for plans that were resolved
+        from `auto` — the documented sharded-predict strategy)."""
+        from repro.compat import shard_map
+
+        key = (id(mesh), tuple(data_axes), model_axis, strategy)
+        fn = self._sharded_cache.get(key)
+        if fn is not None:
+            return fn
+
+        ens, cfg = self.ensemble, self.config
+        if strategy is not None and strategy != cfg.strategy:
+            cfg = dataclasses.replace(cfg, strategy=strategy)
+        dp, tree_p = P(tuple(data_axes)), P(model_axis)
+
+        def _local(sf, sb, lv, borders, xs):
+            local = ObliviousEnsemble(sf, sb, lv, borders, ens.n_borders)
+            plan = Predictor.build(local, cfg)  # zero base on tree shards
+            return jax.lax.psum(plan.raw_uncached(xs), model_axis)
+
+        smapped = shard_map(_local, mesh=mesh,
+                            in_specs=(tree_p, tree_p, tree_p, P(), dp),
+                            out_specs=dp)
+
+        # jitted so the shard_map body (which prepares per-shard local
+        # plans) traces once per batch shape, not on every call
+        jitted = jax.jit(lambda x: ens.base_score[None, :] + smapped(
+            ens.split_features, ens.split_bins, ens.leaf_values,
+            ens.borders, x))
+
+        def fn(x):
+            return jitted(jnp.asarray(x, jnp.float32))
+
+        self._sharded_cache[key] = fn
+        return fn
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def stats(self) -> dict[str, Any]:
+        """Plan-cache telemetry: XLA traces per entry point, distinct
+        (entry, batch shape) cache keys seen, and how many model-side
+        pad ops the one-time build spent."""
+        with self._lock:
+            return {
+                "traces": dict(self._traces),
+                "total_traces": sum(self._traces.values()),
+                "cache_entries": len(self._entry_shapes),
+                "entry_shapes": sorted(self._entry_shapes),
+                "build_model_pads": self._build_model_pads,
+            }
+
+    def describe(self) -> dict[str, Any]:
+        return {**self.ensemble.describe(),
+                "strategy": self.config.strategy,
+                "backend": self.config.backend,
+                "tree_block": self.config.tree_block,
+                "block_n": self.config.block_n,
+                "block_t": self.config.block_t}
+
+    def __repr__(self) -> str:
+        c = self.config
+        return (f"<Predictor {c.strategy}/{c.backend} "
+                f"trees={self.ensemble.n_trees} "
+                f"depth={self.ensemble.depth} C={self.ensemble.n_outputs}>")
+
+
+# --------------------------------------------------------------------------
+# CatBoost JSON ingestion
+# --------------------------------------------------------------------------
+def load_catboost_json(path: str | pathlib.Path) -> ObliviousEnsemble:
+    """Parse a CatBoost oblivious-tree JSON export into an ensemble.
+
+    Reads the subset of `save_model(..., format="json")` the paper's
+    workloads need: `features_info.float_features[*].borders`,
+    `oblivious_trees[*].splits` (float splits only: feature index +
+    border value) and flat `leaf_values`, plus `scale_and_bias`.
+
+    Conventions mapped onto this repo's model:
+      * split j of a tree contributes bit j of the leaf index
+        (CatBoost lists splits bottom-up, matching `ref.leaf_index`)
+      * CatBoost's `x > border` with border at sorted index k becomes
+        `bins >= k + 1` in quantized space
+      * trees shallower than the deepest are padded with always-left
+        splits (`PAD_SPLIT_BIN`), their leaf values at indices < 2^d
+      * `leaf_values` is length 2^d * dim, leaf-major
+    """
+    obj = json.loads(pathlib.Path(path).read_text())
+    floats = obj.get("features_info", {}).get("float_features", [])
+    if not floats:
+        raise ValueError(f"{path}: no features_info.float_features — not a "
+                         "CatBoost JSON model export?")
+    trees = obj.get("oblivious_trees", [])
+    if not trees:
+        raise ValueError(f"{path}: no oblivious_trees (only oblivious-tree "
+                         "models are supported)")
+    for t, tree in enumerate(trees):
+        if "splits" not in tree or "leaf_values" not in tree:
+            raise ValueError(f"{path}: tree {t} is missing "
+                             "splits/leaf_values — truncated export?")
+
+    def flat_index(feat, i):
+        return int(feat.get("flat_feature_index",
+                            feat.get("feature_index", i)))
+
+    n_features = 1 + max(flat_index(f, i) for i, f in enumerate(floats))
+    per_feature: list[list[float]] = [[] for _ in range(n_features)]
+    for i, f in enumerate(floats):
+        per_feature[flat_index(f, i)] = [float(v)
+                                         for v in (f.get("borders") or [])]
+
+    depth = max(len(t["splits"]) for t in trees)
+    if depth < 1:
+        raise ValueError(f"{path}: model has splitless trees only")
+    d0 = len(trees[0]["splits"])
+    n_leaf0 = len(trees[0]["leaf_values"])
+    if n_leaf0 % (1 << d0):
+        raise ValueError(f"{path}: tree 0 has {n_leaf0} leaf values, not a "
+                         f"multiple of 2^depth={1 << d0}")
+    n_outputs = n_leaf0 // (1 << d0)
+
+    n_trees = len(trees)
+    sf = np.zeros((n_trees, depth), np.int32)
+    sb = np.full((n_trees, depth), PAD_SPLIT_BIN, np.int32)
+    lv = np.zeros((n_trees, 1 << depth, n_outputs), np.float32)
+    for t, tree in enumerate(trees):
+        splits = tree["splits"]
+        d = len(splits)
+        vals = np.asarray(tree["leaf_values"], np.float32)
+        if vals.size != (1 << d) * n_outputs:
+            raise ValueError(
+                f"{path}: tree {t} has {vals.size} leaf values; expected "
+                f"2^{d} * {n_outputs} (inconsistent approx dimension)")
+        for j, s in enumerate(splits):
+            stype = s.get("split_type", "FloatFeature")
+            if stype != "FloatFeature":
+                raise ValueError(f"{path}: tree {t} split {j} has type "
+                                 f"{stype!r}; only FloatFeature is "
+                                 "supported")
+            fi = int(s.get("float_feature_index",
+                           s.get("feature_index", -1)))
+            if not 0 <= fi < n_features:
+                raise ValueError(f"{path}: tree {t} split {j} references "
+                                 f"feature {fi} outside [0, {n_features})")
+            if "border" not in s:
+                raise ValueError(f"{path}: tree {t} split {j} has no "
+                                 "border value")
+            border = float(s["border"])
+            feature_borders = per_feature[fi]
+            if not feature_borders:
+                raise ValueError(f"{path}: tree {t} splits on feature {fi} "
+                                 "which has no borders")
+            k = int(np.argmin(np.abs(np.asarray(feature_borders) - border)))
+            if not np.isclose(feature_borders[k], border,
+                              rtol=1e-6, atol=1e-9):
+                raise ValueError(
+                    f"{path}: tree {t} split {j} border {border} not found "
+                    f"among feature {fi}'s borders")
+            sf[t, j] = fi
+            sb[t, j] = k + 1
+        lv[t, :1 << d, :] = vals.reshape(1 << d, n_outputs)
+
+    scale, bias = 1.0, np.zeros((n_outputs,), np.float32)
+    snb = obj.get("scale_and_bias")
+    if snb:
+        scale = float(snb[0])
+        raw_bias = snb[1]
+        if isinstance(raw_bias, (int, float)):
+            raw_bias = [raw_bias]
+        b = np.asarray(raw_bias, np.float32)
+        if b.size == 1:
+            bias = np.full((n_outputs,), float(b[0]), np.float32)
+        elif b.size == n_outputs:
+            bias = b
+        else:
+            raise ValueError(f"{path}: scale_and_bias bias has {b.size} "
+                             f"entries for {n_outputs} outputs")
+
+    n_borders = np.asarray([len(b) for b in per_feature], np.int32)
+    max_b = max(1, int(n_borders.max()))
+    borders = np.full((max_b, n_features), np.inf, np.float32)
+    for fi, vals in enumerate(per_feature):
+        borders[:len(vals), fi] = vals
+
+    return ObliviousEnsemble(
+        split_features=jnp.asarray(sf),
+        split_bins=jnp.asarray(sb),
+        leaf_values=jnp.asarray(lv * np.float32(scale)),
+        borders=jnp.asarray(borders),
+        n_borders=jnp.asarray(n_borders),
+        base_score=jnp.asarray(bias),
+    )

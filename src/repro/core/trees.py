@@ -22,7 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-PAD_SPLIT_BIN = 1 << 30
+# Canonical definition lives with the kernels (padding happens there);
+# re-exported here because the model layer is where most callers look.
+from repro.kernels.ops import PAD_SPLIT_BIN  # noqa: F401
 
 
 @jax.tree_util.register_dataclass
@@ -59,6 +61,11 @@ class ObliviousEnsemble:
 
     def slice_trees(self, start: int, stop: int) -> "ObliviousEnsemble":
         """Tree-block view (the paper's CalcTreesBlockedImpl granularity)."""
+        if not 0 <= start <= stop <= self.n_trees:
+            raise ValueError(
+                f"slice_trees({start}, {stop}) out of range for an "
+                f"ensemble of {self.n_trees} trees "
+                "(need 0 <= start <= stop <= n_trees)")
         return dataclasses.replace(
             self,
             split_features=self.split_features[start:stop],
@@ -108,6 +115,28 @@ def empty_ensemble(n_features: int, depth: int, n_outputs: int,
 
 def concat_ensembles(a: ObliviousEnsemble, b: ObliviousEnsemble
                      ) -> ObliviousEnsemble:
+    """Append b's trees to a (a's borders/base_score win).
+
+    Two ensembles are only summable when they agree on tree depth,
+    output width and the quantization borders — a mismatch silently
+    produces garbage leaf sums, so each is a hard error here.
+    """
+    if a.depth != b.depth:
+        raise ValueError(f"cannot concat ensembles of different depth: "
+                         f"{a.depth} vs {b.depth}")
+    if a.n_outputs != b.n_outputs:
+        raise ValueError(f"cannot concat ensembles with different "
+                         f"n_outputs: {a.n_outputs} vs {b.n_outputs}")
+    if a.borders.shape != b.borders.shape:
+        raise ValueError(f"cannot concat ensembles quantized with "
+                         f"different border tables: {a.borders.shape} vs "
+                         f"{b.borders.shape}")
+    if not (isinstance(a.borders, jax.core.Tracer)
+            or isinstance(b.borders, jax.core.Tracer)):
+        if not np.array_equal(np.asarray(a.borders), np.asarray(b.borders)):
+            raise ValueError(
+                "cannot concat ensembles quantized with different border "
+                "values: split_bins index into incompatible bin spaces")
     return dataclasses.replace(
         a,
         split_features=jnp.concatenate([a.split_features, b.split_features]),

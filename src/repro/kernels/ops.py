@@ -25,11 +25,27 @@ from repro.kernels import tuning as _tuning
 Backend = Literal["auto", "pallas", "ref"]
 
 # Sentinel bin id guaranteeing `bins < PAD_SPLIT_BIN` (padded trees go left).
+# Canonical definition — `core.trees` re-exports it.
 PAD_SPLIT_BIN = 1 << 30
+
+# Lane width the kernels align the feature axis to (VPU lane / MXU edge).
+FEATURE_ALIGN = 128
+
+
+@functools.cache
+def default_platform() -> str:
+    """`jax.default_backend()`, resolved once per process.
+
+    The platform cannot change mid-process, and querying it inside traced
+    code paths (every `auto` dispatch used to) is wasted work on each
+    predict call — plan builders and the auto dispatch both read this
+    cached value instead.
+    """
+    return jax.default_backend()
 
 
 def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return default_platform() == "tpu"
 
 
 def _interpret() -> bool:
@@ -40,10 +56,30 @@ def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
-def _pad_dim(a: jax.Array, axis: int, target: int, value=0) -> jax.Array:
+# Pad-op accounting, split by which side of the problem was padded:
+#   model — ensemble arrays (borders / splits / leaf values); a prepared
+#           plan must incur these exactly once, at build time
+#   data  — per-batch arrays (x / bins / idx); unavoidable per call
+# Counters tick only when a pad actually happens (width 0 is free) and
+# only when the padding code runs, i.e. once per trace under jit.
+_PAD_STATS = {"model": 0, "data": 0}
+
+
+def pad_stats() -> dict[str, int]:
+    return dict(_PAD_STATS)
+
+
+def reset_pad_stats() -> None:
+    for k in _PAD_STATS:
+        _PAD_STATS[k] = 0
+
+
+def _pad_dim(a: jax.Array, axis: int, target: int, value=0,
+             kind: str = "data") -> jax.Array:
     pad = target - a.shape[axis]
     if pad == 0:
         return a
+    _PAD_STATS[kind] += 1
     widths = [(0, 0)] * a.ndim
     widths[axis] = (0, pad)
     return jnp.pad(a, widths, constant_values=value)
@@ -70,7 +106,7 @@ def binarize(x: jax.Array, borders: jax.Array, *, backend: Backend = "auto",
     N, F = x.shape
     Np, Fp = _round_up(max(N, 1), block_n), _round_up(max(F, 1), block_f)
     xp = _pad_dim(_pad_dim(x, 0, Np), 1, Fp)
-    bp = _pad_dim(borders, 1, Fp, value=np.float32(np.inf))
+    bp = _pad_dim(borders, 1, Fp, value=np.float32(np.inf), kind="model")
     out = _binarize_k.binarize(xp, bp, block_n=block_n, block_f=block_f,
                                interpret=_interpret())
     return out[:N, :F]
@@ -87,8 +123,8 @@ def leaf_index(bins: jax.Array, split_features: jax.Array,
     Np, Tp = _round_up(N, block_n), _round_up(T, block_t)
     Fp = _round_up(F, 128)
     binsp = _pad_dim(_pad_dim(bins, 0, Np), 1, Fp)
-    sfp = _pad_dim(split_features, 0, Tp)
-    sbp = _pad_dim(split_bins, 0, Tp, value=PAD_SPLIT_BIN)
+    sfp = _pad_dim(split_features, 0, Tp, kind="model")
+    sbp = _pad_dim(split_bins, 0, Tp, value=PAD_SPLIT_BIN, kind="model")
     out = _index_k.leaf_index(binsp, sfp, sbp, block_n=block_n,
                               block_t=block_t, interpret=_interpret())
     return out[:N, :T]
@@ -104,7 +140,7 @@ def leaf_gather(idx: jax.Array, leaf_values: jax.Array, *,
     _, L, C = leaf_values.shape
     Np, Tp = _round_up(N, block_n), _round_up(T, block_t)
     idxp = _pad_dim(_pad_dim(idx, 0, Np), 1, Tp)
-    lvp = _pad_dim(leaf_values, 0, Tp)    # zero leaves: padded trees no-op
+    lvp = _pad_dim(leaf_values, 0, Tp, kind="model")  # zero leaves: no-op trees
     out = _gather_k.leaf_gather(idxp, lvp, block_n=block_n, block_t=block_t,
                                 interpret=_interpret())
     return out[:N]
@@ -167,12 +203,98 @@ def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
         block_t = block_t or tt
     Np = _round_up(N, block_n)
     Tp = _round_up(T, block_t)
-    Fp = _round_up(F, 128)
+    Fp = _round_up(F, FEATURE_ALIGN)
     xp = _pad_dim(_pad_dim(x, 0, Np), 1, Fp)
-    bp = _pad_dim(borders, 1, Fp, value=np.float32(np.inf))
-    sfp = _pad_dim(split_features, 0, Tp)
-    sbp = _pad_dim(split_bins, 0, Tp, value=PAD_SPLIT_BIN)
-    lvp = _pad_dim(leaf_values, 0, Tp)
+    bp = _pad_dim(borders, 1, Fp, value=np.float32(np.inf), kind="model")
+    sfp = _pad_dim(split_features, 0, Tp, kind="model")
+    sbp = _pad_dim(split_bins, 0, Tp, value=PAD_SPLIT_BIN, kind="model")
+    lvp = _pad_dim(leaf_values, 0, Tp, kind="model")
     out = _fused_k.fused_predict(xp, bp, sfp, sbp, lvp, block_n=block_n,
                                  block_t=block_t, interpret=_interpret())
+    return out[:N]
+
+
+# --------------------------------------------------------------------------
+# Prepadded-model fast paths (the compiled-plan Predictor's hot loop)
+# --------------------------------------------------------------------------
+# These entry points take ensemble arrays that a plan builder
+# (`core.predictor.Predictor.build`) has already padded to block
+# multiples, so only the data side (x / bins / idx) is padded per call —
+# the per-call model `jnp.pad`s the paper hoists out of the loop are gone.
+# Invariants the builder guarantees for the pallas backend:
+#   borders  F padded to a FEATURE_ALIGN multiple with +inf
+#   splits   T padded to a block_t multiple (bins=PAD_SPLIT_BIN: go left)
+#   leaves   T padded with zeros (padded trees contribute nothing)
+# On the ref backend the same arrays work unpadded — ref kernels accept
+# any shape — so a ref plan carries the original arrays through.
+
+def fused_predict_prepadded(x: jax.Array, borders: jax.Array,
+                            split_features: jax.Array, split_bins: jax.Array,
+                            leaf_values: jax.Array, *,
+                            backend: Backend = "auto",
+                            block_n: int = 128,
+                            block_t: int = 16) -> jax.Array:
+    """Fused predict on a prepadded model -> (N, C) f32."""
+    if not _use_pallas(backend):
+        xp = _pad_dim(x, 1, borders.shape[1])
+        return _ref.fused_predict(xp, borders, split_features, split_bins,
+                                  leaf_values)
+    N = x.shape[0]
+    Np = _round_up(max(N, 1), block_n)
+    xp = _pad_dim(_pad_dim(x, 0, Np), 1, borders.shape[1])
+    out = _fused_k.fused_predict(xp, borders, split_features, split_bins,
+                                 leaf_values, block_n=block_n,
+                                 block_t=block_t, interpret=_interpret())
+    return out[:N]
+
+
+def binarize_prepadded(x: jax.Array, borders: jax.Array, *,
+                       backend: Backend = "auto",
+                       block_n: int = 256) -> jax.Array:
+    """Binarize against prepadded borders -> (N, Fp) int32.
+
+    Keeps the padded feature columns (bins for +inf-border features are
+    zero) so the downstream prepadded stages see an aligned F axis.
+    """
+    Fp = borders.shape[1]
+    xp = _pad_dim(x, 1, Fp)
+    if not _use_pallas(backend):
+        return _ref.binarize(xp, borders)
+    N = x.shape[0]
+    Np = _round_up(max(N, 1), block_n)
+    xp = _pad_dim(xp, 0, Np)
+    out = _binarize_k.binarize(xp, borders, block_n=block_n,
+                               block_f=FEATURE_ALIGN,
+                               interpret=_interpret())
+    return out[:N]
+
+
+def leaf_index_prepadded(bins: jax.Array, split_features: jax.Array,
+                         split_bins: jax.Array, *,
+                         backend: Backend = "auto", block_n: int = 256,
+                         block_t: int = 16) -> jax.Array:
+    """Leaf indices on prepadded splits -> (N, Tp) int32 (padded trees
+    land in leaf 0, which holds a zero leaf value)."""
+    if not _use_pallas(backend):
+        return _ref.leaf_index(bins, split_features, split_bins)
+    N = bins.shape[0]
+    Np = _round_up(max(N, 1), block_n)
+    binsp = _pad_dim(bins, 0, Np)
+    out = _index_k.leaf_index(binsp, split_features, split_bins,
+                              block_n=block_n, block_t=block_t,
+                              interpret=_interpret())
+    return out[:N]
+
+
+def leaf_gather_prepadded(idx: jax.Array, leaf_values: jax.Array, *,
+                          backend: Backend = "auto", block_n: int = 128,
+                          block_t: int = 16) -> jax.Array:
+    """Sum prepadded leaf values at idx -> (N, C) f32."""
+    if not _use_pallas(backend):
+        return _ref.leaf_gather(idx, leaf_values)
+    N = idx.shape[0]
+    Np = _round_up(max(N, 1), block_n)
+    idxp = _pad_dim(idx, 0, Np)
+    out = _gather_k.leaf_gather(idxp, leaf_values, block_n=block_n,
+                                block_t=block_t, interpret=_interpret())
     return out[:N]

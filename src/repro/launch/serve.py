@@ -16,6 +16,7 @@ def serve_gbdt(args):
 
     from repro.core import boosting, losses
     from repro.core.boosting import BoostingParams
+    from repro.core.predictor import PredictConfig
     from repro.data import synthetic
     from repro.serving.engine import ModelRegistry
 
@@ -26,13 +27,15 @@ def serve_gbdt(args):
                           params=BoostingParams(
                               n_trees=args.trees, depth=ds.params.depth,
                               learning_rate=0.1))
-    registry = ModelRegistry(max_batch=args.batch,
-                             strategy=args.strategy, backend=args.backend,
-                             tree_block=args.tree_block,
+    # One PredictConfig for the registry; each server builds its
+    # compiled plan from it at registration (auto resolved there).
+    config = PredictConfig(strategy=args.strategy, backend=args.backend,
+                           tree_block=args.tree_block)
+    registry = ModelRegistry(max_batch=args.batch, config=config,
                              min_bucket=args.min_bucket)
     server = registry.register(args.dataset, ens)
-    print(f"[serve:gbdt] model={args.dataset} strategy={args.strategy} "
-          f"backend={args.backend} buckets={server.buckets}")
+    print(f"[serve:gbdt] model={args.dataset} plan={server.config} "
+          f"buckets={server.buckets}")
     t0 = time.perf_counter()
     n = 200
     for i in range(n):

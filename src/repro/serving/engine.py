@@ -24,24 +24,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import knn, predict
+from repro.core import knn
+from repro.core.predictor import PredictConfig, Predictor, proba_from_raw
 from repro.core.trees import ObliviousEnsemble
 from repro.serving.batching import Batcher, BucketedBatcher, Request  # noqa: F401  (re-export)
 from repro.serving.metrics import ServerMetrics
 
 
 class GBDTServer:
-    """Batched GBDT scoring service.
+    """Batched GBDT scoring service over a compiled prediction plan.
 
-    Every batch the batcher flushes is padded up to one of
-    ``batcher.buckets`` before it reaches the jitted predict function,
-    so the number of XLA traces is bounded by the bucket count — the
-    `metrics.recompiles` counter asserts this in tests.  The predict
-    configuration (strategy / backend / tree_block / Pallas block
-    shapes) is taken at construction and baked into the jitted closure.
+    At construction the server builds one `Predictor` — `auto` choices
+    resolved, model arrays padded to block multiples, jitted entry
+    points cached — and every batch is scored through that plan; nothing
+    model-side is re-prepared per request.  Every batch the batcher
+    flushes is padded up to one of ``batcher.buckets`` before it reaches
+    the plan, so the number of XLA traces is bounded by the bucket count
+    — the `metrics.recompiles` counter asserts this in tests.
+
+    Pass a `PredictConfig` as ``config``; the loose ``strategy`` /
+    ``backend`` / ``tree_block`` / ``block_n`` / ``block_t`` kwargs are
+    the deprecated equivalents kept for existing callers.
     """
 
     def __init__(self, ensemble: ObliviousEnsemble, *,
+                 config: Optional[PredictConfig] = None,
                  strategy: str = "auto", backend: str = "auto",
                  tree_block: int = 0,
                  block_n: Optional[int] = None,
@@ -51,30 +58,46 @@ class GBDTServer:
                  buckets: Optional[Sequence[int]] = None,
                  min_bucket: int = 16,
                  name: str = "gbdt"):
+        legacy_kw = {"strategy": strategy, "backend": backend,
+                     "tree_block": tree_block, "block_n": block_n,
+                     "block_t": block_t}
+        if config is None:
+            config = PredictConfig(**legacy_kw)
+        else:
+            defaults = PredictConfig()
+            clashing = [k for k, v in legacy_kw.items()
+                        if v != getattr(defaults, k)]
+            if clashing:
+                raise TypeError(
+                    "pass either config= or the deprecated predict "
+                    f"kwargs, not both: {sorted(clashing)}")
         self.ensemble = ensemble
         self.mesh = mesh
-        self.strategy = strategy
-        self.backend = backend
         self.metrics = ServerMetrics(name)
-
-        def _proba(x: jax.Array) -> jax.Array:
-            # Body runs only when jax traces (= compiles) a new shape;
-            # counting here counts exactly the recompiles.
-            self.metrics.note_trace()
-            return predict.predict_proba(
-                ensemble, x, strategy=strategy, backend=backend,
-                tree_block=tree_block, block_n=block_n, block_t=block_t)
-
-        self._jit = jax.jit(_proba)
+        # One plan per server: the tuner sizes fused blocks for the
+        # largest bucket; the plan's trace counter feeds `recompiles`.
+        # A mesh server scores exclusively through the sharded closure,
+        # which prepares per tree shard — prepare=False skips the local
+        # padded model copy the serve path would never read.
+        self.predictor = Predictor.build(ensemble, config,
+                                         expected_batch=max_batch,
+                                         on_trace=self.metrics.note_trace,
+                                         prepare=mesh is None)
+        # sharded predict stays on the paper-faithful staged pipeline
+        # unless the caller explicitly asked for fused (fused-inside-
+        # shard_map is not a serving-supported combination for `auto`)
+        self._sharded = None
+        if mesh is not None:
+            sharded_strategy = ("staged" if config.strategy == "auto"
+                                else config.strategy)
+            self._sharded = self.predictor.sharded(
+                mesh, strategy=sharded_strategy)
 
         def serve(xs: np.ndarray) -> np.ndarray:
-            x = jnp.asarray(xs, jnp.float32)
-            if self.mesh is not None:
-                raw = predict.predict_sharded(
-                    ensemble, x, self.mesh,
-                    strategy="staged" if strategy == "auto" else strategy)
-                return np.asarray(jax.nn.softmax(raw, axis=-1))
-            return np.asarray(self._jit(x))
+            if self._sharded is not None:
+                raw = self._sharded(jnp.asarray(xs, jnp.float32))
+                return np.asarray(proba_from_raw(raw, ensemble.n_outputs))
+            return np.asarray(self.predictor.proba(xs))
 
         self.batcher = BucketedBatcher(serve, max_batch=max_batch,
                                        max_wait_ms=max_wait_ms,
@@ -82,6 +105,11 @@ class GBDTServer:
                                        min_bucket=min_bucket,
                                        metrics=self.metrics)
         self._serve_padded = serve
+
+    @property
+    def config(self) -> PredictConfig:
+        """The resolved plan configuration this server scores with."""
+        return self.predictor.config
 
     @property
     def buckets(self) -> tuple[int, ...]:
@@ -117,8 +145,15 @@ class ModelRegistry:
     """Several named GBDT ensembles served from one process.
 
     Each model gets its own `GBDTServer` (own batcher thread, own
-    compile cache, own metrics); registry-level `metrics()` aggregates
-    the per-model snapshots for export.
+    compiled `Predictor` plan, own metrics); registry-level `metrics()`
+    aggregates the per-model snapshots for export.
+
+    Cache invalidation: a `Predictor` plan is immutable — it holds the
+    padded model arrays and jit caches for the ensemble it was built
+    from.  Swapping an ensemble under a name (``register(...,
+    replace=True)``) therefore tears down the whole old server, plan
+    included, and builds a fresh one; handing a new ensemble to an
+    existing plan is not supported.
     """
 
     def __init__(self, **default_server_kw: Any):
@@ -131,6 +166,9 @@ class ModelRegistry:
             if not replace:
                 raise KeyError(f"model {name!r} already registered "
                                "(pass replace=True to swap it)")
+            # Swap = full teardown: the old server's Predictor plan
+            # (padded arrays + jit caches) is bound to the old ensemble
+            # and must not survive the swap.
             self._servers.pop(name).close()
         kw = {**self._default_kw, **server_kw, "name": name}
         server = GBDTServer(ensemble, **kw)
@@ -175,18 +213,20 @@ class EmbeddingGBDTPipeline:
 
     def __init__(self, featurizer: knn.KNNFeaturizer,
                  ensemble: ObliviousEnsemble,
-                 embed_fn: Optional[Callable] = None):
+                 embed_fn: Optional[Callable] = None,
+                 config: Optional[PredictConfig] = None):
         self.featurizer = featurizer
         self.ensemble = ensemble
         self.embed_fn = embed_fn          # raw input -> embedding (stub ok)
+        self.predictor = Predictor.build(
+            ensemble, config or PredictConfig(backend="ref"))
 
     def predict(self, inputs: np.ndarray) -> np.ndarray:
         emb = (self.embed_fn(inputs) if self.embed_fn is not None
                else jnp.asarray(inputs))
         feats = self.featurizer.transform(emb)
         x = jnp.concatenate([emb, feats], axis=1)
-        return np.asarray(predict.predict_class(self.ensemble, x,
-                                                backend="ref"))
+        return np.asarray(self.predictor.classify(x))
 
 
 class LMServer:

@@ -6,6 +6,7 @@ import pytest
 
 from repro.core import boosting, losses, predict
 from repro.core.boosting import BoostingParams
+from repro.core.predictor import PredictConfig
 from repro.data import synthetic
 from repro.kernels import ops, ref, tuning
 from repro.serving import batching
@@ -198,6 +199,28 @@ def test_predict_batch_chunks_oversized_input(cov_model):
         server.close()
 
 
+def test_server_accepts_predict_config(cov_model):
+    # The compiled-plan path: one PredictConfig in, a resolved plan out,
+    # no kwarg threading.
+    ens, ds = cov_model
+    server = GBDTServer(ens, config=PredictConfig(strategy="fused",
+                                                  backend="ref"),
+                        max_batch=32)
+    try:
+        assert server.config.is_resolved
+        assert server.config.strategy == "fused"
+        out = server.predict_batch(ds.x_test[:20])
+        want = np.asarray(predict.predict_proba(
+            ens, jnp.asarray(ds.x_test[:20]), strategy="staged",
+            backend="ref"))
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+        # server recompile metrics are fed by the plan's trace counter
+        assert server.predictor.stats["total_traces"] == \
+            server.metrics.snapshot()["recompiles"]
+    finally:
+        server.close()
+
+
 # --------------------------------------------------------------------------
 # Registry
 # --------------------------------------------------------------------------
@@ -220,5 +243,22 @@ def test_registry_serves_multiple_models(cov_model):
             reg.get("nope")
         reg.unregister("staged")
         assert reg.names() == ["fused"]
+    finally:
+        reg.close()
+
+
+def test_registry_swap_builds_fresh_plan(cov_model):
+    # Predictor plans are immutable: swapping the ensemble under a name
+    # must discard the old server and its plan caches wholesale.
+    ens, ds = cov_model
+    reg = ModelRegistry(backend="ref", max_batch=32)
+    try:
+        old = reg.register("m", ens)
+        old_plan = old.predictor
+        reg.predict_batch("m", ds.x_test[:4])
+        new = reg.register("m", ens, replace=True)
+        assert new is not old
+        assert new.predictor is not old_plan
+        assert new.predictor.stats["total_traces"] == 0
     finally:
         reg.close()

@@ -1,23 +1,34 @@
-"""Prepared-plan vs per-call-padding predictor benchmark.
+"""Prepared-plan vs per-call-padding predictor benchmark, plus the
+quantize-once scenarios the quantized-first API exists for.
 
-Measures the cost the compiled-plan API hoists out of the hot loop: the
-legacy kwarg path (`core.predict.raw_predict`) re-resolves the backend,
-re-runs the block tuner and re-pads the model arrays on every call,
-while `Predictor.build` does all of that once and then dispatches
-through a shape-cached jitted entry.
-
-Three rows (ref backend, so kernel math is identical and the delta is
-pure per-call preparation + dispatch):
+Scenario 1 (``run``) measures the cost the compiled-plan API hoists out
+of the hot loop: the legacy kwarg path (`core.predict.raw_predict`)
+re-resolves the backend, re-runs the block tuner and re-pads the model
+arrays on every call, while `Predictor.build` does all of that once and
+then dispatches through a shape-cached jitted entry.
 
   kwarg       eager legacy path, per-call preparation
   kwarg-jit   legacy path under a caller-side jax.jit (the old
               "fast" pattern every call site had to hand-roll)
   prepared    Predictor built once, plan.raw per call
 
+Scenario 2 (``run_quantized``) measures what quantizing once hoists on
+top of a prepared plan:
+
+  prepared-float   plan.raw(x) — binarize runs inside every call
+  prequantized     pool = plan.quantize(x) once; plan.raw(pool) per
+                   call — binarize never runs
+
+Scenario 3 (``run_registry``) is the multi-model serving shape: K
+models sharing one feature schema score the same batch.  The float
+path binarizes K times per batch; `ModelRegistry.predict_multi`
+quantizes once and scores K pools.
+
 Emits the same ``name,us_per_call,derived`` CSV rows as benchmarks.run.
-With ``--check`` the process exits nonzero unless the prepared path is
-at least at parity with the *best* legacy row — the CI gate for the
-plan API never regressing below the kwarg path it replaced.
+With ``--check`` the process exits nonzero unless (a) the prepared path
+is at least at parity with the *best* legacy row and (b) the
+prequantized paths match the float paths exactly (the parity gates for
+the plan and pool APIs never regressing).
 
   PYTHONPATH=src python -m benchmarks.predictor_bench [--quick] [--check]
 """
@@ -33,12 +44,28 @@ def eprint(*a):
     print(*a, file=sys.stderr, flush=True)
 
 
-def run(n_trees: int, batch: int, iters: int) -> dict[str, float]:
-    import functools
+def _timed_paths(paths: dict, x, iters: int) -> dict[str, list[float]]:
+    """Interleave the paths round-robin so machine drift (shared CI
+    boxes) hits all of them equally; returns per-round times."""
     import time
 
     import jax
-    import jax.numpy as jnp
+
+    times: dict[str, list[float]] = {name: [] for name in paths}
+    for fn in paths.values():
+        jax.block_until_ready(fn(x))            # warm compile caches
+    for _ in range(iters):
+        for name, fn in paths.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            times[name].append(time.perf_counter() - t0)
+    return times
+
+
+def run(n_trees: int, batch: int, iters: int) -> dict[str, float]:
+    import functools
+
+    import jax
 
     from benchmarks.serving_bench import _build_model
     from repro.core import predict
@@ -48,6 +75,7 @@ def run(n_trees: int, batch: int, iters: int) -> dict[str, float]:
     xs = np.asarray(ds.x_test, np.float32)
     while len(xs) < batch:
         xs = np.concatenate([xs, xs])
+    import jax.numpy as jnp
     x = jnp.asarray(xs[:batch])
 
     kwarg = functools.partial(predict.raw_predict, ens,
@@ -59,16 +87,7 @@ def run(n_trees: int, batch: int, iters: int) -> dict[str, float]:
                            expected_batch=batch)
     paths = {"kwarg": kwarg, "kwarg-jit": kwarg_jit, "prepared": plan.raw}
 
-    # Interleave the paths round-robin so machine drift (shared CI
-    # boxes) hits all of them equally; per-path medians over rounds.
-    times: dict[str, list[float]] = {name: [] for name in paths}
-    for fn in paths.values():
-        jax.block_until_ready(fn(x))            # warm compile caches
-    for _ in range(iters):
-        for name, fn in paths.items():
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(x))
-            times[name].append(time.perf_counter() - t0)
+    times = _timed_paths(paths, x, iters)
     out = {name: float(np.median(ts)) for name, ts in times.items()}
     # per-round ratio vs the jitted legacy path, for the parity gate:
     # pairing within a round cancels drift a sequential comparison keeps
@@ -81,42 +100,146 @@ def run(n_trees: int, batch: int, iters: int) -> dict[str, float]:
     return out
 
 
+def run_quantized(n_trees: int, batch: int, iters: int) -> dict[str, float]:
+    """Prepared-float vs prequantized-pool scoring on one plan."""
+    import jax.numpy as jnp
+
+    from benchmarks.serving_bench import _build_model
+    from repro.core.predictor import PredictConfig, Predictor
+
+    ens, ds = _build_model(n_trees)
+    xs = np.asarray(ds.x_test, np.float32)
+    while len(xs) < batch:
+        xs = np.concatenate([xs, xs])
+    x = jnp.asarray(xs[:batch])
+
+    plan = Predictor.build(ens, PredictConfig(strategy="staged",
+                                              backend="ref"),
+                           expected_batch=batch)
+    pool = plan.quantize(x)                     # quantize ONCE
+    paths = {"prepared-float": plan.raw,
+             "prequantized": lambda _x: plan.raw(pool)}
+    times = _timed_paths(paths, x, iters)
+    out = {name: float(np.median(ts)) for name, ts in times.items()}
+    # parity gate: the pool path is the same math, binarize skipped
+    err = float(np.max(np.abs(np.asarray(plan.raw(x))
+                              - np.asarray(plan.raw(pool)))))
+    out["max_abs_err"] = err
+    return out
+
+
+def run_registry(n_trees: int, batch: int, iters: int,
+                 n_models: int) -> dict[str, float]:
+    """Quantize-once / score-K-models over `ModelRegistry`.
+
+    The K models are tree-slices of one ensemble, so they share the
+    quantization schema by construction (the registry-serving pattern:
+    model variants trained on one quantized dataset)."""
+    from benchmarks.serving_bench import _build_model
+    from repro.core.predictor import PredictConfig
+    from repro.serving.engine import ModelRegistry
+
+    ens, ds = _build_model(n_trees)
+    xs = np.asarray(ds.x_test, np.float32)
+    while len(xs) < batch:
+        xs = np.concatenate([xs, xs])
+    xs = xs[:batch]
+
+    n_models = min(n_models, ens.n_trees)      # at most one tree per model
+    per_model = ens.n_trees // n_models
+    registry = ModelRegistry(max_batch=batch,
+                             config=PredictConfig(strategy="staged",
+                                                  backend="ref"))
+    try:
+        for i in range(n_models):
+            lo = i * per_model
+            registry.register(f"m{i}", ens.slice_trees(
+                lo, min(lo + per_model, ens.n_trees)))
+        names = registry.names()
+        fkey, pkey = f"float-x{n_models}", f"pooled-x{n_models}"
+        # jax.block_until_ready in _timed_paths works on the dict of
+        # np arrays each path returns (np conversion already synced)
+        paths = {fkey: lambda _: {n: registry.predict_batch(n, xs)
+                                  for n in names},
+                 pkey: lambda _: registry.predict_multi(xs, names)}
+        times = _timed_paths(paths, None, iters)
+        out = {k: float(np.median(v)) for k, v in times.items()}
+        a, b = paths[fkey](None), paths[pkey](None)
+        out["max_abs_err"] = max(
+            float(np.max(np.abs(a[n] - b[n]))) for n in names)
+        out["_keys"] = (fkey, pkey)
+        return out
+    finally:
+        registry.close()
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--check", action="store_true",
-                    help="exit 1 if prepared path is below parity with "
-                         "the best legacy path")
+                    help="exit 1 if the prepared path is below parity "
+                         "with the best legacy path, or if a quantized "
+                         "path diverges from its float path")
     ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--models", type=int, default=4,
+                    help="K models sharing a schema in the registry "
+                         "scenario")
     args = ap.parse_args()
 
     n_trees = 30 if args.quick else 100
     iters = 10 if args.quick else 30
     batch = min(args.batch, 64) if args.quick else args.batch
+    n_models = max(2, min(args.models, 4) if args.quick else args.models)
 
     res = run(n_trees, batch, iters)
+    qres = run_quantized(n_trees, batch, iters)
+    rres = run_registry(n_trees, batch, iters, n_models)
     # parity gate on the median per-round prepared-vs-jitted-legacy
     # ratio; >= 0.66 (prepared within 1.5x) tolerates dispatch jitter on
     # loaded CI boxes while still catching a reintroduced per-call model
     # pad (that costs whole multiples, not fractions)
     parity = res["parity_ratio"] >= 0.66
+    # the quantized paths are the same math: exact-ish parity, gated
+    q_parity = (qres["max_abs_err"] < 1e-4
+                and rres["max_abs_err"] < 1e-4)
 
     eprint(f"# predictor bench: batch={batch}, {n_trees} trees, "
            f"{iters} interleaved rounds, ref backend")
     for name in ("kwarg", "kwarg-jit", "prepared"):
-        eprint(f"{name:10s} {res[name] * 1e6:10.1f} us/call "
+        eprint(f"{name:16s} {res[name] * 1e6:10.1f} us/call "
                f"({res['kwarg'] / res[name]:5.2f}x vs kwarg)")
     eprint(f"prepared vs jitted legacy (median per-round ratio): "
            f"{res['parity_ratio']:.2f}x "
            f"({'parity OK' if parity else 'BELOW PARITY'})")
+    eprint(f"# quantize-once (single plan): binarize in-loop vs hoisted")
+    for name in ("prepared-float", "prequantized"):
+        eprint(f"{name:16s} {qres[name] * 1e6:10.1f} us/call "
+               f"({qres['prepared-float'] / qres[name]:5.2f}x vs float)")
+    fkey, pkey = rres.pop("_keys")
+    eprint(f"# quantize-once / score-{n_models}-models (ModelRegistry)")
+    for name in (fkey, pkey):
+        eprint(f"{name:16s} {rres[name] * 1e6:10.1f} us/batch "
+               f"({rres[fkey] / rres[name]:5.2f}x vs float)")
+    eprint(f"quantized-path parity: max |err| = "
+           f"{max(qres['max_abs_err'], rres['max_abs_err']):.2e} "
+           f"({'OK' if q_parity else 'MISMATCH'})")
 
     print("name,us_per_call,derived")
     for name in ("kwarg", "kwarg-jit", "prepared"):
         print(f"predictor/{name},{res[name] * 1e6:.1f},"
               f"speedup_vs_kwarg={res['kwarg'] / res[name]:.2f}")
+    for name in ("prepared-float", "prequantized"):
+        print(f"predictor/{name},{qres[name] * 1e6:.1f},"
+              f"speedup_vs_float={qres['prepared-float'] / qres[name]:.2f}")
+    for name in (fkey, pkey):
+        print(f"predictor/{name},{rres[name] * 1e6:.1f},"
+              f"speedup_vs_float={rres[fkey] / rres[name]:.2f}")
 
     if args.check and not parity:
         eprint("FAIL: prepared plan slower than the kwarg path it replaces")
+        return 1
+    if args.check and not q_parity:
+        eprint("FAIL: quantized path diverges from the float path")
         return 1
     return 0
 

@@ -35,6 +35,15 @@ def main():
     acc = float((np.asarray(pred) == ds.y_test).mean())
     print(f"test accuracy: {acc:.4f}")
 
+    # Quantize once, score many: binarize the batch a single time into
+    # a uint8 pool; every subsequent predict skips binarization (the
+    # paper's evaluators only ever see the quantized representation).
+    pool = plan.quantize(x_test)
+    pool_pred = plan.classify(pool)
+    same = bool(np.array_equal(np.asarray(pred), np.asarray(pool_pred)))
+    print(f"quantized pool: bins {pool.bins.shape} {pool.bins.dtype}, "
+          f"schema {pool.fingerprint}, float==pool predictions: {same}")
+
     # strategies must agree (paper's x86-vs-RISC-V parity check analog)
     staged = Predictor.build(ens, PredictConfig(strategy="staged",
                                                 backend="ref"))

@@ -31,10 +31,16 @@ EOF
 echo "== tier-1 pytest =="
 if [[ "${CI_QUICK:-0}" == "1" ]]; then
     python -m pytest -x -q tests/test_serving.py tests/test_kernels.py \
-        tests/test_kernel_blocks.py tests/test_sharding.py
+        tests/test_kernel_blocks.py tests/test_sharding.py \
+        tests/test_quantized.py
 else
     python -m pytest -x -q
 fi
+
+echo "== kernel registry smoke (introspection surface) =="
+python -c "from repro.kernels import registry; rows = registry.table(); \
+  assert all(any(r['op'] == op for r in rows) for op in registry.CORE_OPS); \
+  print(registry.format_table())"
 
 echo "== quickstart example =="
 python examples/quickstart.py
@@ -42,9 +48,12 @@ python examples/quickstart.py
 echo "== serving benchmark (quick) =="
 python -m benchmarks.serving_bench --quick >/dev/null
 
-echo "== predictor smoke benchmark (prepared plan vs per-call padding) =="
+echo "== predictor smoke benchmark (prepared / prequantized / registry) =="
 # --check fails the build if the prepared-plan path is below parity
-# with the kwarg path it replaced (ref backend, so same kernel math).
+# with the kwarg path it replaced, or if a quantized scenario
+# (prepared+prequantized vs prepared-float, quantize-once score-many
+# over ModelRegistry) diverges from its float path (ref backend, so
+# same kernel math).
 python -m benchmarks.predictor_bench --quick --check >/dev/null
 
 echo "CI OK"

@@ -28,32 +28,36 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.predictor import (PredictConfig, Predictor, Strategy,
                                   classify_from_raw, proba_from_raw)
+from repro.core.quantize import QuantizedPool
 from repro.core.trees import ObliviousEnsemble
 
 
-def _one_shot(ensemble: ObliviousEnsemble, x: jax.Array, strategy, backend,
+def _one_shot(ensemble: ObliviousEnsemble, x, strategy, backend,
               tree_block, block_n, block_t) -> Predictor:
     """One-shot plan for the legacy kwarg path.  Per-call preparation is
     exactly what `Predictor.build` exists to hoist — acceptable here
     because this shim is documented as the slow compatibility path."""
+    n = len(x) if isinstance(x, QuantizedPool) else x.shape[0]
     return Predictor.build(
         ensemble,
         PredictConfig(strategy=strategy, backend=backend,
                       tree_block=tree_block, block_n=block_n,
                       block_t=block_t),
-        expected_batch=x.shape[0])
+        expected_batch=n)
 
 
-def raw_predict(ensemble: ObliviousEnsemble, x: jax.Array, *,
+def raw_predict(ensemble: ObliviousEnsemble, x, *,
                 strategy: Strategy = "auto",
                 backend: str = "auto",
                 tree_block: int = 0,
                 block_n: int | None = None,
                 block_t: int | None = None) -> jax.Array:
-    """(N, F) float32 -> (N, C) float32 raw scores (sum over trees).
+    """(N, F) float32 — or a `QuantizedPool` — -> (N, C) float32 raw
+    scores (sum over trees); the pool path skips binarization.
 
     Deprecated kwarg path — see the module docstring; prefer
-    `Predictor.build(...).raw(x)`.
+    `Predictor.build(...).raw(x)` (and `plan.quantize(x)` for the
+    quantize-once workflow).
     """
     plan = _one_shot(ensemble, x, strategy, backend, tree_block,
                      block_n, block_t)

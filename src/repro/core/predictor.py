@@ -16,12 +16,26 @@ predict.  This module is the prepare-once counterpart:
   plan.classify(x)  # argmax / threshold
   plan.sharded(mesh)(x)   # mesh-distributed raw scores
 
-`Predictor.build` resolves `auto` choices to concrete ones (backend from
-the — cached — platform query, fused block shapes from `kernels.tuning`),
-pads the model arrays to block multiples exactly once, and caches jitted
-entry points; with bucketed serving batches the number of XLA compiles
-is bounded by (entry points x batch buckets).  The kwarg API in
-`core.predict` remains as a thin one-shot shim over this class.
+Quantized-first evaluation (the paper's actual data flow — its
+evaluators binarize once and run CalcIndexes over uint8 bins, never
+re-touching float features):
+
+  pool = plan.quantize(x)      # binarize ONCE -> uint8 QuantizedPool
+  plan.raw(pool)               # skips binarize entirely
+  plan.proba(pool); plan.classify(pool)
+
+A pool is schema-stamped (`quantize.borders_fingerprint`): scoring it
+through a plan quantized with different borders raises `ValueError`
+instead of silently indexing the wrong bin space.  Models sharing a
+schema share pools — the multi-model registry serving win.
+
+`Predictor.build` resolves `auto` choices to concrete ones (backend via
+the kernel registry's platform default, fused block shapes from
+`kernels.tuning`), pads the model arrays to block multiples exactly
+once, and caches jitted entry points; with bucketed serving batches the
+number of XLA compiles is bounded by (entry points x batch buckets).
+The kwarg API in `core.predict` remains as a thin one-shot shim over
+this class.
 
 `from_catboost_json` ingests CatBoost's exported oblivious-tree JSON
 (`model.save_model(f, format="json")`): per-feature borders, split
@@ -41,16 +55,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.quantize import (QuantizedPool, borders_fingerprint,
+                                 MAX_BINS)
 from repro.core.trees import ObliviousEnsemble
 from repro.kernels import ops
+from repro.kernels import registry
 from repro.kernels import tuning
 from repro.kernels.ops import PAD_SPLIT_BIN
 
 Strategy = Literal["auto", "staged", "fused"]
-Backend = Literal["auto", "pallas", "ref"]
+Backend = str   # "auto" or a kernel-registry backend family
 
 _STRATEGIES = ("auto", "staged", "fused")
-_BACKENDS = ("auto", "pallas", "ref")
 
 # T-axis alignment of the prepadded staged path (the leaf_index /
 # leaf_gather kernels' default tree block).
@@ -66,7 +82,13 @@ class PredictConfig:
     nothing downstream re-queries the platform or the tuner per call.
 
       strategy   staged (paper three-pass) | fused (single Pallas pass)
-      backend    pallas (real kernels; interpret on CPU) | ref (pure jnp)
+      backend    a kernel-registry backend: pallas (real kernels;
+                 interpret on CPU) | ref (pure jnp) — validated against
+                 `kernels.registry.known_backends()`.  Note a third
+                 registered family would pass validation but currently
+                 gets the ref (unpadded) model layout: `_prepare_model`
+                 only knows how to pre-pad for the pallas kernels'
+                 block contracts
       tree_block staged-path tree blocking (CalcTreesBlockedImpl); 0 = off
       block_n/t  fused-kernel Pallas block shapes; None = autotuned
     """
@@ -80,8 +102,9 @@ class PredictConfig:
         if self.strategy not in _STRATEGIES:
             raise ValueError(f"strategy must be one of {_STRATEGIES}, "
                              f"got {self.strategy!r}")
-        if self.backend not in _BACKENDS:
-            raise ValueError(f"backend must be one of {_BACKENDS}, "
+        backends = ("auto",) + registry.known_backends()
+        if self.backend not in backends:
+            raise ValueError(f"backend must be one of {backends}, "
                              f"got {self.backend!r}")
         if not isinstance(self.tree_block, int) or self.tree_block < 0:
             raise ValueError(f"tree_block must be an int >= 0, "
@@ -103,17 +126,18 @@ class PredictConfig:
                 n_rows: Optional[int] = None) -> "PredictConfig":
         """Concretize every `auto` choice for one ensemble.
 
-        Platform is read once per process (`ops.default_platform`);
-        fused block shapes come from the VMEM footprint model in
-        `kernels.tuning`, sized to this ensemble (and `n_rows`, the
-        expected batch size, when known).
+        The `auto` backend resolves through the kernel registry
+        (`registry.default_backend()`, reading the once-per-process
+        platform); fused block shapes come from the VMEM footprint
+        model in `kernels.tuning`, sized to this ensemble (and
+        `n_rows`, the expected batch size, when known).
         """
         strategy, backend = self.strategy, self.backend
         if strategy == "auto":
             strategy = "fused" if ops.default_platform() == "tpu" \
                 else "staged"
         if backend == "auto":
-            backend = "pallas" if ops.default_platform() == "tpu" else "ref"
+            backend = registry.default_backend()
         block_n, block_t = self.block_n, self.block_t
         if strategy == "fused" and (block_n is None or block_t is None):
             tn, tt = tuning.best_fused_blocks(
@@ -244,10 +268,22 @@ class Predictor:
         self._traces: dict[str, int] = {}
         self._entry_shapes: set[tuple] = set()
         self._sharded_cache: dict[tuple, Callable] = {}
+        # Schema fingerprint: which QuantizedPools this plan may score.
+        # Computed lazily — the per-shard plans `sharded()` builds inside
+        # shard_map hold tracer borders, which cannot be hashed (and
+        # never score pools).
+        self._schema_fingerprint: Optional[str] = None
         self._entries = {
             "raw": self._make_entry("raw", self._raw_impl),
             "proba": self._make_entry("proba", self._proba_impl),
             "classify": self._make_entry("classify", self._classify_impl),
+            # quantized-pool entries: same surface, bins in, no binarize
+            "raw_pool": self._make_entry("raw_pool", self._pool_raw_impl),
+            "proba_pool": self._make_entry("proba_pool",
+                                           self._pool_proba_impl),
+            "classify_pool": self._make_entry("classify_pool",
+                                              self._pool_classify_impl),
+            "quantize": self._make_entry("quantize", self._quantize_impl),
         }
 
     # -- construction ------------------------------------------------------
@@ -288,6 +324,15 @@ class Predictor:
         return cls.build(load_catboost_json(path), config, **build_kw)
 
     # -- plan internals ----------------------------------------------------
+    @property
+    def schema_fingerprint(self) -> str:
+        """Fingerprint of this plan's quantization schema: pools are
+        scoreable iff their fingerprint matches."""
+        if self._schema_fingerprint is None:
+            self._schema_fingerprint = borders_fingerprint(
+                self.ensemble.borders)
+        return self._schema_fingerprint
+
     def _note_trace(self, name: str) -> None:
         with self._lock:
             self._traces[name] = self._traces.get(name, 0) + 1
@@ -318,6 +363,37 @@ class Predictor:
                     self._build_model_pads = pads
         return p
 
+    def _accumulate_trees(self, bins: jax.Array) -> jax.Array:
+        """Staged index+gather over prepadded tree arrays, from bins.
+
+        Shared by the float path (after its binarize stage) and the
+        quantized-pool path (which starts here — binarize never runs).
+        `bins` may be int32 or uint8; the registry routes uint8 to the
+        u8 kernel variants.  A fused-strategy plan scoring a pool also
+        lands here: its trees are padded to cfg.block_t multiples, so
+        the staged kernels get that block shape.
+        """
+        cfg, p = self.config, self._prepared_model
+        block_t = (cfg.block_t if cfg.strategy == "fused"
+                   else STAGED_TREE_ALIGN)
+        if p.tree_blocks is not None:
+            # CalcTreesBlockedImpl with the block slices cut at build time
+            acc = jnp.zeros((bins.shape[0], self.ensemble.n_outputs),
+                            jnp.float32)
+            for sf, sb, lv in p.tree_blocks:
+                idx = ops.leaf_index_prepadded(bins, sf, sb,
+                                               backend=cfg.backend,
+                                               block_t=block_t)
+                acc = acc + ops.leaf_gather_prepadded(idx, lv,
+                                                      backend=cfg.backend,
+                                                      block_t=block_t)
+            return acc
+        idx = ops.leaf_index_prepadded(bins, p.split_features, p.split_bins,
+                                       backend=cfg.backend, block_t=block_t)
+        return ops.leaf_gather_prepadded(idx, p.leaf_values,
+                                         backend=cfg.backend,
+                                         block_t=block_t)
+
     def _raw_impl(self, x: jax.Array) -> jax.Array:
         cfg, p = self.config, self._prepared_model
         base = self.ensemble.base_score[None, :]
@@ -327,20 +403,7 @@ class Predictor:
                 backend=cfg.backend, block_n=cfg.block_n,
                 block_t=cfg.block_t)
         bins = ops.binarize_prepadded(x, p.borders, backend=cfg.backend)
-        if p.tree_blocks is not None:
-            # CalcTreesBlockedImpl with the block slices cut at build time
-            acc = jnp.zeros((x.shape[0], self.ensemble.n_outputs),
-                            jnp.float32)
-            for sf, sb, lv in p.tree_blocks:
-                idx = ops.leaf_index_prepadded(bins, sf, sb,
-                                               backend=cfg.backend)
-                acc = acc + ops.leaf_gather_prepadded(idx, lv,
-                                                      backend=cfg.backend)
-            return base + acc
-        idx = ops.leaf_index_prepadded(bins, p.split_features, p.split_bins,
-                                       backend=cfg.backend)
-        return base + ops.leaf_gather_prepadded(idx, p.leaf_values,
-                                                backend=cfg.backend)
+        return base + self._accumulate_trees(bins)
 
     def _proba_impl(self, x: jax.Array) -> jax.Array:
         return proba_from_raw(self._raw_impl(x), self.ensemble.n_outputs)
@@ -349,30 +412,96 @@ class Predictor:
         return classify_from_raw(self._raw_impl(x),
                                  self.ensemble.n_outputs)
 
+    # -- quantized-pool path (binarize skipped entirely) -------------------
+    def _pool_raw_impl(self, bins: jax.Array) -> jax.Array:
+        # Pool bins carry the unpadded feature axis (shareable across
+        # plans); pad data-side up to the prepadded borders' aligned F.
+        p = self._prepared_model
+        bins = ops.pad_features(bins, p.borders.shape[1])
+        base = self.ensemble.base_score[None, :]
+        return base + self._accumulate_trees(bins)
+
+    def _pool_proba_impl(self, bins: jax.Array) -> jax.Array:
+        return proba_from_raw(self._pool_raw_impl(bins),
+                              self.ensemble.n_outputs)
+
+    def _pool_classify_impl(self, bins: jax.Array) -> jax.Array:
+        return classify_from_raw(self._pool_raw_impl(bins),
+                                 self.ensemble.n_outputs)
+
+    def _quantize_impl(self, x: jax.Array) -> jax.Array:
+        # Binarize against the *prepadded* borders (zero model-side pads
+        # at trace time), then drop the alignment columns so the pool is
+        # schema-wide shareable, not plan-layout specific.
+        p = self._prepared_model
+        bins = ops.binarize_u8_prepadded(x, p.borders,
+                                         backend=self.config.backend)
+        return bins[:, :self.ensemble.n_features]
+
+    def _check_pool(self, pool: QuantizedPool) -> None:
+        if pool.fingerprint != self.schema_fingerprint:
+            raise ValueError(
+                "QuantizedPool schema mismatch: pool was quantized under "
+                f"fingerprint {pool.fingerprint} but this plan's borders "
+                f"have fingerprint {self.schema_fingerprint} — its "
+                "split_bins would index a different bin space.  "
+                "Re-quantize with this plan's `quantize(x)` (pools are "
+                "only shareable across models with identical borders).")
+
     def _call(self, name: str, x) -> jax.Array:
         if self._prepared_model is None:
             self._ensure_prepared()
+        if isinstance(x, QuantizedPool):
+            self._check_pool(x)
+            bins = x.bins
+            if not (isinstance(bins, jax.Array)
+                    and bins.dtype == jnp.uint8):
+                bins = jnp.asarray(bins, jnp.uint8)
+            return self._entries[name + "_pool"](bins)
         if not (isinstance(x, jax.Array) and x.dtype == jnp.float32):
             x = jnp.asarray(x, jnp.float32)   # skip no-op asarray dispatch
         return self._entries[name](x)
 
     # -- public entry points -----------------------------------------------
+    def quantize(self, x) -> QuantizedPool:
+        """Binarize a float batch once into a reusable `QuantizedPool`.
+
+        (N, F) float -> uint8 pool; `raw/proba/classify` accept the
+        pool and skip binarization entirely.  Pools are shareable
+        across every plan whose ensemble has identical borders
+        (`schema_fingerprint` guards this at score time)."""
+        if self.ensemble.borders.shape[0] > MAX_BINS - 1:
+            raise ValueError(
+                f"cannot quantize to uint8 bins: ensemble has "
+                f"{self.ensemble.borders.shape[0]} borders "
+                f"(> {MAX_BINS - 1})")
+        self._ensure_prepared()
+        x = jnp.asarray(x, jnp.float32)
+        return QuantizedPool(self._entries["quantize"](x),
+                             self.schema_fingerprint)
+
     def raw(self, x) -> jax.Array:
-        """(N, F) -> (N, C) raw scores (tree sum + base score)."""
+        """(N, F) floats or a `QuantizedPool` -> (N, C) raw scores
+        (tree sum + base score).  The pool path never binarizes."""
         return self._call("raw", x)
 
     def proba(self, x) -> jax.Array:
-        """(N, F) -> (N, max(C, 2)) class probabilities."""
+        """(N, F) floats or a `QuantizedPool` -> (N, max(C, 2))
+        class probabilities."""
         return self._call("proba", x)
 
     def classify(self, x) -> jax.Array:
-        """(N, F) -> (N,) int32 class ids."""
+        """(N, F) floats or a `QuantizedPool` -> (N,) int32 class ids."""
         return self._call("classify", x)
 
     def raw_uncached(self, x) -> jax.Array:
         """Un-jitted raw scores — for callers that bring their own jit
-        (the `core.predict` shim, shard_map bodies)."""
+        (the `core.predict` shim, shard_map bodies).  Accepts floats or
+        a `QuantizedPool` like `raw`."""
         self._ensure_prepared()
+        if isinstance(x, QuantizedPool):
+            self._check_pool(x)
+            return self._pool_raw_impl(jnp.asarray(x.bins, jnp.uint8))
         return self._raw_impl(jnp.asarray(x, jnp.float32))
 
     def sharded(self, mesh, *, data_axes: Sequence[str] = ("data",),
@@ -440,7 +569,8 @@ class Predictor:
                 "backend": self.config.backend,
                 "tree_block": self.config.tree_block,
                 "block_n": self.config.block_n,
-                "block_t": self.config.block_t}
+                "block_t": self.config.block_t,
+                "schema_fingerprint": self.schema_fingerprint}
 
     def __repr__(self) -> str:
         c = self.config

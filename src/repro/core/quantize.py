@@ -1,17 +1,30 @@
-"""Feature quantization: border computation + binarization.
+"""Feature quantization: border computation, binarization, and the
+`QuantizedPool` value type the quantized-first evaluation API is built on.
 
-CatBoost quantizes float features into <= 255 bins at train time; borders
-are (approximately) quantile-based.  `compute_borders` reproduces the
-Median+Uniform-ish default with pure quantiles; `binarize_matrix` applies
-them through the kernel op (paper hotspot: BinarizeFloatsNonSse).
+CatBoost quantizes float features into <= 255 bins at train time (the
+255-border cap is what makes one byte per (sample, feature) possible);
+borders are (approximately) quantile-based.  `compute_borders`
+reproduces the Median+Uniform-ish default with pure quantiles;
+`quantize_pool` binarizes once into a schema-stamped uint8 pool that
+`Predictor.raw/proba/classify` score directly — the paper's evaluators
+never touch float features, they run `CalcIndexesBasic` over the
+quantized representation (paper hotspot: BinarizeFloatsNonSse runs
+once, not per predict).
 """
 from __future__ import annotations
+
+import dataclasses
+import hashlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+
+# Bin ids must fit uint8: ids span [0, n_borders], so 255 borders is the
+# cap (CatBoost's own limit).  max_bins = n_borders + 1.
+MAX_BINS = 256
 
 
 def compute_borders(x: np.ndarray, max_bins: int = 64
@@ -20,7 +33,16 @@ def compute_borders(x: np.ndarray, max_bins: int = 64
 
     Returns (borders (B, F) float32 padded with +inf, n_borders (F,) int32)
     where B = max_bins - 1 (bins = borders + 1).
+
+    `max_bins` is capped at 256 so bin ids always fit the uint8
+    quantized-pool representation.  Constant and all-NaN columns get
+    zero borders (a border no sample can cross splits nothing), without
+    tripping numpy's empty-quantile warning path.
     """
+    if not 2 <= max_bins <= MAX_BINS:
+        raise ValueError(
+            f"max_bins must be in [2, {MAX_BINS}] (bin ids must fit "
+            f"uint8: <= {MAX_BINS - 1} borders), got {max_bins}")
     x = np.asarray(x, np.float32)
     n, f = x.shape
     n_borders = max_bins - 1
@@ -30,15 +52,117 @@ def compute_borders(x: np.ndarray, max_bins: int = 64
     for j in range(f):
         col = x[:, j]
         col = col[np.isfinite(col)]
-        uniq = np.unique(np.quantile(col, qs)) if col.size else np.array([])
-        # Drop degenerate borders (constant features yield none).
-        uniq = uniq[np.isfinite(uniq)]
+        if col.size == 0:          # all-NaN/inf column: nothing to split
+            continue
+        hi = col.max()
+        if col.min() == hi:        # constant column: no border separates
+            continue
+        uniq = np.unique(np.quantile(col, qs).astype(np.float32))
+        # A border is useful only if some sample lands on each side
+        # (x > border for some, not all); quantiles at the column max
+        # are degenerate, as are any non-finite leftovers.
+        uniq = uniq[np.isfinite(uniq) & (uniq < hi)]
         counts[j] = len(uniq)
-        borders[:len(uniq), j] = uniq.astype(np.float32)
+        borders[:len(uniq), j] = uniq
     return jnp.asarray(borders), jnp.asarray(counts)
+
+
+def borders_fingerprint(borders) -> str:
+    """Schema fingerprint of a quantization: models sharing it accept
+    the same `QuantizedPool` (same feature count, same border values,
+    hence the same bin-id space for `split_bins` to index into).
+
+    The hash covers exactly the borders array — the only input
+    binarization reads — so `quantize_pool(x, ens.borders)` and
+    `Predictor.quantize` stamp identical fingerprints for identical
+    borders with no extra arguments to keep in sync."""
+    b = np.ascontiguousarray(np.asarray(borders, np.float32))
+    h = hashlib.sha1()
+    h.update(repr(b.shape).encode())
+    h.update(b.tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedPool:
+    """A batch binarized once: uint8 bins + the schema they were
+    quantized under.
+
+    This is the interface the fast evaluators are built on — quantize
+    once, score many (multi-model serving, repeated scoring, train-time
+    eval).  `Predictor.raw/proba/classify` accept a pool and skip
+    binarization entirely; the fingerprint guards against scoring a
+    pool through a model quantized with different borders (silent
+    garbage otherwise — `split_bins` would index a different bin space).
+    """
+    bins: jax.Array                # (N, F) uint8 — unpadded feature axis
+    fingerprint: str               # `borders_fingerprint` of the schema
+
+    def __post_init__(self):
+        if self.bins.ndim != 2:
+            raise ValueError(f"pool bins must be (N, F), got shape "
+                             f"{tuple(self.bins.shape)}")
+        if self.bins.dtype != jnp.uint8:
+            raise ValueError(f"pool bins must be uint8, got "
+                             f"{self.bins.dtype}")
+
+    @property
+    def n_rows(self) -> int:
+        return self.bins.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.bins.shape[1]
+
+    def __len__(self) -> int:
+        return self.n_rows
+
+    def slice_rows(self, start: int, stop: int) -> "QuantizedPool":
+        """Row-range view (serving chunks oversized pools with this)."""
+        return dataclasses.replace(self, bins=self.bins[start:stop])
+
+    def pad_rows(self, target: int) -> "QuantizedPool":
+        """Zero-pad to `target` rows (bucketed serving).  Bin 0 per
+        feature is exactly what binarizing a zero-padded float row
+        against +inf-padded borders yields, so padded rows are sliced
+        off downstream just like the float path's."""
+        n = self.n_rows
+        if n == target:
+            return self
+        if n > target:
+            raise ValueError(f"cannot pad {n} pool rows down to {target}")
+        pad = jnp.zeros((target - n, self.n_features), jnp.uint8)
+        return dataclasses.replace(
+            self, bins=jnp.concatenate([jnp.asarray(self.bins), pad]))
+
+
+def quantize_pool(x, borders, *, backend: str = "auto") -> QuantizedPool:
+    """Binarize a float batch once into a reusable `QuantizedPool`.
+
+    Requires <= 255 borders (uint8 bin ids); `backend` follows the
+    kernel registry's legacy shim values ("auto"/"ref"/"pallas" or an
+    exact implementation name).
+    """
+    if borders.shape[0] > MAX_BINS - 1:
+        raise ValueError(
+            f"quantize_pool needs <= {MAX_BINS - 1} borders for uint8 "
+            f"bins, got {borders.shape[0]} (compute_borders caps "
+            f"max_bins at {MAX_BINS})")
+    x = jnp.asarray(x, jnp.float32)
+    bins = ops.binarize_u8(x, borders, backend=backend)
+    return QuantizedPool(bins, borders_fingerprint(borders))
 
 
 def binarize_matrix(x: jax.Array, borders: jax.Array, *,
                     backend: str = "auto") -> jax.Array:
-    """(N, F) float32 -> (N, F) int32 bin ids via the binarize kernel."""
+    """(N, F) float32 -> (N, F) int32 bin ids.
+
+    .. deprecated::
+        Thin shim over the registry-dispatched `kernels.ops.binarize`
+        (the same treatment `core.predict` got): kept for existing
+        callers like `core.boosting`.  New code wanting a reusable
+        quantized batch should build a `QuantizedPool` via
+        `quantize_pool` / `Predictor.quantize`, which yields the uint8
+        representation the quantized-first scoring path consumes.
+    """
     return ops.binarize(x, borders, backend=backend)

@@ -1,4 +1,9 @@
-"""Pallas TPU kernels for the paper hotspots + pure-jnp oracles."""
-from repro.kernels import ops, ref  # noqa: F401
+"""Pallas TPU kernels for the paper hotspots + pure-jnp oracles.
 
-__all__ = ["ops", "ref"]
+Importing the package registers every kernel implementation in
+`repro.kernels.registry` (ops.py registers at import time), so
+`from repro.kernels import registry; registry.table()` always sees the
+full dispatch surface."""
+from repro.kernels import ops, ref, registry  # noqa: F401
+
+__all__ = ["ops", "ref", "registry"]

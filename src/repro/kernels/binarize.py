@@ -29,16 +29,25 @@ def _binarize_kernel(x_ref, borders_ref, out_ref, *, n_borders: int):
         return acc + (x > border_row).astype(jnp.int32)
 
     acc0 = jnp.zeros(x.shape, dtype=jnp.int32)
-    out_ref[...] = jax.lax.fori_loop(0, n_borders, body, acc0)
+    # Accumulate in int32 (the compare-add loop), store in the output
+    # dtype: uint8 for the quantized-pool path (the paper's one-byte bin
+    # stream — vadd_vv_u8m1_m accumulates in u8 directly), int32 legacy.
+    out_ref[...] = jax.lax.fori_loop(0, n_borders, body, acc0).astype(
+        out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_f", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_f", "interpret",
+                                    "out_dtype"))
 def binarize(x: jax.Array, borders: jax.Array, *, block_n: int = 256,
-             block_f: int = 128, interpret: bool = False) -> jax.Array:
-    """bins[n, f] = #{b : x[n, f] > borders[b, f]}  -> (N, F) int32.
+             block_f: int = 128, interpret: bool = False,
+             out_dtype=jnp.int32) -> jax.Array:
+    """bins[n, f] = #{b : x[n, f] > borders[b, f]}  -> (N, F) `out_dtype`.
 
     Inputs must be pre-padded: N % block_n == 0, F % block_f == 0 (ops.py
-    handles padding).  Padded border rows must be +inf.
+    handles padding).  Padded border rows must be +inf.  `out_dtype`
+    uint8 requires B <= 255 (validated in ops.py; 8-bit stores use the
+    (32, 128) tile on real TPUs — interpret mode has no such constraint).
     """
     N, F = x.shape
     B = borders.shape[0]
@@ -51,6 +60,6 @@ def binarize(x: jax.Array, borders: jax.Array, *, block_n: int = 256,
             pl.BlockSpec((B, block_f), lambda i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((block_n, block_f), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((N, F), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((N, F), out_dtype),
         interpret=interpret,
     )(x, borders)

@@ -36,8 +36,12 @@ def _fused_kernel(x_ref, borders_ref, sf_ref, sb_ref, lv_ref, out_ref,
                                                keepdims=True)
             return acc + (x > row).astype(jnp.int32)
 
+        # accumulate in int32, store in the scratch dtype (uint8 when
+        # the ensemble fits 255 borders: 4x less VMEM held across every
+        # tree block — the quantized-pool representation, in-kernel)
         bins_scratch[...] = jax.lax.fori_loop(
-            0, n_borders, body, jnp.zeros(x.shape, jnp.int32))
+            0, n_borders, body,
+            jnp.zeros(x.shape, jnp.int32)).astype(bins_scratch.dtype)
 
     bins = bins_scratch[...].astype(jnp.float32)     # (bn, F)
     sf = sf_ref[...]                                 # (bt, D)
@@ -74,11 +78,14 @@ def _fused_kernel(x_ref, borders_ref, sf_ref, sb_ref, lv_ref, out_ref,
         out_ref[...] += acc
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_t", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_t", "interpret",
+                                    "bins_scratch_dtype"))
 def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
                   split_bins: jax.Array, leaf_values: jax.Array, *,
                   block_n: int = 128, block_t: int = 16,
-                  interpret: bool = False) -> jax.Array:
+                  interpret: bool = False,
+                  bins_scratch_dtype=jnp.int32) -> jax.Array:
     """Fused GBDT predict -> (N, C) float32.
 
     Raw kernel entry: N and T must already be multiples of the block
@@ -86,7 +93,9 @@ def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
     split_bins > #bins (padded samples/features are harmless zeros).
     `kernels.ops.fused_predict` is the public wrapper that performs that
     padding and picks the block shapes from the tuner — call it, not
-    this, unless you have pre-padded tensors.
+    this, unless you have pre-padded tensors.  `bins_scratch_dtype`
+    uint8 (valid when B <= 255) quarters the VMEM the binarized block
+    holds across tree blocks; values are exact either way.
     """
     N, F = x.shape
     B = borders.shape[0]
@@ -110,6 +119,6 @@ def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_n, C), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((N, C), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_n, F), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((block_n, F), bins_scratch_dtype)],
         interpret=interpret,
     )(x, borders, split_features, split_bins, leaf_values)

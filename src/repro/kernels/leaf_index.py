@@ -25,6 +25,9 @@ from jax.experimental import pallas as pl
 
 
 def _leaf_index_kernel(bins_ref, sf_ref, sb_ref, out_ref):
+    # bins may arrive int32 (legacy) or uint8 (quantized pool); both
+    # upcast exactly to float32 for the MXU gather (bin ids <= 255 and
+    # split ids < 2^30 are exact in f32).
     bins = bins_ref[...].astype(jnp.float32)          # (bn, F)
     sf = sf_ref[...]                                  # (bt, D) int32
     sb = sb_ref[...]                                  # (bt, D) int32
@@ -70,3 +73,25 @@ def leaf_index(bins: jax.Array, split_features: jax.Array,
         out_shape=jax.ShapeDtypeStruct((N, T), jnp.int32),
         interpret=interpret,
     )(bins, split_features, split_bins)
+
+
+def leaf_index_u8(bins: jax.Array, split_features: jax.Array,
+                  split_bins: jax.Array, *, block_n: int = 256,
+                  block_t: int = 16, interpret: bool = False) -> jax.Array:
+    """`leaf_index` over the quantized-pool bin stream: uint8 bins.
+
+    Mirrors the paper's CalcIndexesBasic loop, which runs entirely on
+    the *quantized* uint8 representation (vmsgeu compares u8 bins
+    against the u8 split border) — binarization never reruns per tree.
+    The kernel body is shared with the int32 variant (bins upcast to
+    f32 for the one-hot MXU gather either way); this entry pins the
+    dtype contract and keeps the 4x-narrower bins panel (block_n x F
+    bytes instead of words) VMEM-resident per sample block.  8-bit
+    loads use the (32, 128) tile on real TPUs; interpret mode has no
+    such constraint.
+    """
+    if bins.dtype != jnp.uint8:
+        raise TypeError(f"leaf_index_u8 takes uint8 bins, got {bins.dtype} "
+                        "(use leaf_index for int32)")
+    return leaf_index(bins, split_features, split_bins, block_n=block_n,
+                      block_t=block_t, interpret=interpret)

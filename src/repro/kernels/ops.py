@@ -1,14 +1,20 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Public kernel ops: registry-dispatched wrappers around the Pallas
+kernels and their jnp oracles.
 
-Handles shape padding (block-size alignment), backend dispatch (Pallas on
-TPU, interpret=True Pallas or the pure-jnp reference on CPU) and
-un-padding.  This is the only module the rest of the framework imports
-from `repro.kernels`.
+Every op (binarize, leaf_index, leaf_gather, l2sq, fused_predict) has
+named implementations registered in `kernels.registry` — "ref" (pure
+jnp), "pallas" (real kernels; interpret mode off-TPU), and uint8
+bin-stream variants ("ref_u8", "pallas_u8") for the quantized-pool
+path.  The implementations here own shape padding (block-size
+alignment) and un-padding; the public wrappers are thin shims that map
+the legacy `backend="auto"|"ref"|"pallas"` kwarg onto a registry lookup
+(`registry.resolve`) and dispatch.  This module is the only one the
+rest of the framework imports from `repro.kernels`; pass exact
+implementation names (e.g. `backend="pallas_u8"`) to pin a variant.
 """
 from __future__ import annotations
 
 import functools
-from typing import Literal
 
 import jax
 import jax.numpy as jnp
@@ -20,9 +26,12 @@ from repro.kernels import l2dist as _l2_k
 from repro.kernels import leaf_gather as _gather_k
 from repro.kernels import leaf_index as _index_k
 from repro.kernels import ref as _ref
+from repro.kernels import registry
 from repro.kernels import tuning as _tuning
 
-Backend = Literal["auto", "pallas", "ref"]
+# Legacy alias: a backend value is "auto", a registry backend family
+# ("ref" / "pallas"), or an exact implementation name ("pallas_u8").
+Backend = str
 
 # Sentinel bin id guaranteeing `bins < PAD_SPLIT_BIN` (padded trees go left).
 # Canonical definition — `core.trees` re-exports it.
@@ -30,6 +39,10 @@ PAD_SPLIT_BIN = 1 << 30
 
 # Lane width the kernels align the feature axis to (VPU lane / MXU edge).
 FEATURE_ALIGN = 128
+
+# Largest border count whose bin ids fit the uint8 quantized-pool
+# representation (CatBoost's 255-border cap: ids span [0, B] <= 255).
+MAX_U8_BORDERS = 255
 
 
 @functools.cache
@@ -85,59 +98,155 @@ def _pad_dim(a: jax.Array, axis: int, target: int, value=0,
     return jnp.pad(a, widths, constant_values=value)
 
 
-def _use_pallas(backend: Backend) -> bool:
-    if backend == "pallas":
-        return True
-    if backend == "ref":
-        return False
-    # auto: Pallas on TPU; pure-jnp reference on CPU (interpret mode is a
-    # correctness tool, far too slow for CPU production use).
-    return _on_tpu()
+def pad_features(bins: jax.Array, target_f: int) -> jax.Array:
+    """Data-side pad of a bin matrix's feature axis up to `target_f`
+    (the prepadded model's aligned width).  Zero bins are what +inf
+    padding borders would have produced, so the pad is exact."""
+    return _pad_dim(bins, 1, target_f)
+
+
+def _require_u8_borders(borders: jax.Array) -> None:
+    if borders.shape[0] > MAX_U8_BORDERS:
+        raise ValueError(
+            f"uint8 bins need <= {MAX_U8_BORDERS} borders, got "
+            f"{borders.shape[0]} (see quantize.compute_borders's "
+            "max_bins cap)")
 
 
 # --------------------------------------------------------------------------
-# Public ops
+# Registered implementations: binarize
 # --------------------------------------------------------------------------
-def binarize(x: jax.Array, borders: jax.Array, *, backend: Backend = "auto",
-             block_n: int = 256, block_f: int = 128) -> jax.Array:
-    """(N, F) f32, (B, F) f32 -> (N, F) int32 bin indices."""
-    if not _use_pallas(backend):
-        return _ref.binarize(x, borders)
+@registry.register("binarize", "ref", dtypes=("int32",),
+                   constraints="any shape; pure-jnp oracle")
+def _binarize_ref(x, borders, *, prepadded=False, **_blocks):
+    if prepadded:
+        x = _pad_dim(x, 1, borders.shape[1])
+    return _ref.binarize(x, borders)
+
+
+@registry.register("binarize", "ref_u8", dtypes=("uint8",),
+                   constraints="<= 255 borders; uint8 bins out")
+def _binarize_ref_u8(x, borders, *, prepadded=False, **_blocks):
+    if prepadded:
+        x = _pad_dim(x, 1, borders.shape[1])
+    return _ref.binarize_u8(x, borders)
+
+
+def _binarize_pallas_impl(x, borders, *, block_n, block_f, prepadded,
+                          out_dtype):
+    if prepadded:
+        # Borders already F-aligned (+inf pad columns); only the data
+        # side is padded per call.  Padded feature columns stay in the
+        # output so downstream prepadded stages see an aligned F axis.
+        Fp = borders.shape[1]
+        xp = _pad_dim(x, 1, Fp)
+        N = x.shape[0]
+        Np = _round_up(max(N, 1), block_n)
+        xp = _pad_dim(xp, 0, Np)
+        out = _binarize_k.binarize(xp, borders, block_n=block_n,
+                                   block_f=FEATURE_ALIGN,
+                                   interpret=_interpret(),
+                                   out_dtype=out_dtype)
+        return out[:N]
     N, F = x.shape
     Np, Fp = _round_up(max(N, 1), block_n), _round_up(max(F, 1), block_f)
     xp = _pad_dim(_pad_dim(x, 0, Np), 1, Fp)
     bp = _pad_dim(borders, 1, Fp, value=np.float32(np.inf), kind="model")
     out = _binarize_k.binarize(xp, bp, block_n=block_n, block_f=block_f,
-                               interpret=_interpret())
+                               interpret=_interpret(), out_dtype=out_dtype)
     return out[:N, :F]
 
 
-def leaf_index(bins: jax.Array, split_features: jax.Array,
-               split_bins: jax.Array, *, backend: Backend = "auto",
-               block_n: int = 256, block_t: int = 16) -> jax.Array:
-    """(N, F) i32, (T, D) i32, (T, D) i32 -> (N, T) int32 leaf ids."""
-    if not _use_pallas(backend):
-        return _ref.leaf_index(bins, split_features, split_bins)
+@registry.register("binarize", "pallas", dtypes=("int32",),
+                   constraints="pads N/F to block multiples")
+def _binarize_pallas(x, borders, *, block_n=256, block_f=128,
+                     prepadded=False):
+    return _binarize_pallas_impl(x, borders, block_n=block_n,
+                                 block_f=block_f, prepadded=prepadded,
+                                 out_dtype=jnp.int32)
+
+
+@registry.register("binarize", "pallas_u8", dtypes=("uint8",),
+                   constraints="<= 255 borders; u8 stores tile (32, 128) "
+                               "on real TPUs")
+def _binarize_pallas_u8(x, borders, *, block_n=256, block_f=128,
+                        prepadded=False):
+    _require_u8_borders(borders)
+    return _binarize_pallas_impl(x, borders, block_n=block_n,
+                                 block_f=block_f, prepadded=prepadded,
+                                 out_dtype=jnp.uint8)
+
+
+# --------------------------------------------------------------------------
+# Registered implementations: leaf_index
+# --------------------------------------------------------------------------
+@registry.register("leaf_index", "ref", dtypes=("int32", "uint8"),
+                   constraints="any shape; bins int32 or uint8")
+def _leaf_index_ref(bins, sf, sb, *, prepadded=False, **_blocks):
+    return _ref.leaf_index(bins, sf, sb)
+
+
+def _leaf_index_pallas_impl(kernel, bins, sf, sb, *, block_n, block_t,
+                            prepadded):
+    if prepadded:
+        N = bins.shape[0]
+        Np = _round_up(max(N, 1), block_n)
+        binsp = _pad_dim(bins, 0, Np)
+        out = kernel(binsp, sf, sb, block_n=block_n, block_t=block_t,
+                     interpret=_interpret())
+        return out[:N]
     N, F = bins.shape
-    T, D = split_features.shape
+    T, D = sf.shape
     Np, Tp = _round_up(N, block_n), _round_up(T, block_t)
-    Fp = _round_up(F, 128)
+    Fp = _round_up(F, FEATURE_ALIGN)
     binsp = _pad_dim(_pad_dim(bins, 0, Np), 1, Fp)
-    sfp = _pad_dim(split_features, 0, Tp, kind="model")
-    sbp = _pad_dim(split_bins, 0, Tp, value=PAD_SPLIT_BIN, kind="model")
-    out = _index_k.leaf_index(binsp, sfp, sbp, block_n=block_n,
-                              block_t=block_t, interpret=_interpret())
+    sfp = _pad_dim(sf, 0, Tp, kind="model")
+    sbp = _pad_dim(sb, 0, Tp, value=PAD_SPLIT_BIN, kind="model")
+    out = kernel(binsp, sfp, sbp, block_n=block_n, block_t=block_t,
+                 interpret=_interpret())
     return out[:N, :T]
 
 
-def leaf_gather(idx: jax.Array, leaf_values: jax.Array, *,
-                backend: Backend = "auto", block_n: int = 128,
-                block_t: int = 16) -> jax.Array:
-    """(N, T) i32, (T, L, C) f32 -> (N, C) f32 summed leaf values."""
-    if not _use_pallas(backend):
-        return _ref.leaf_gather(idx, leaf_values)
+@registry.register("leaf_index", "pallas", dtypes=("int32",),
+                   constraints="pads N/T to block multiples")
+def _leaf_index_pallas(bins, sf, sb, *, block_n=256, block_t=16,
+                       prepadded=False):
+    return _leaf_index_pallas_impl(_index_k.leaf_index, bins, sf, sb,
+                                   block_n=block_n, block_t=block_t,
+                                   prepadded=prepadded)
+
+
+@registry.register("leaf_index", "pallas_u8", dtypes=("uint8",),
+                   constraints="uint8 bins (quantized pool); u8 loads tile "
+                               "(32, 128) on real TPUs")
+def _leaf_index_pallas_u8(bins, sf, sb, *, block_n=256, block_t=16,
+                          prepadded=False):
+    return _leaf_index_pallas_impl(_index_k.leaf_index_u8, bins, sf, sb,
+                                   block_n=block_n, block_t=block_t,
+                                   prepadded=prepadded)
+
+
+# --------------------------------------------------------------------------
+# Registered implementations: leaf_gather
+# --------------------------------------------------------------------------
+@registry.register("leaf_gather", "ref", dtypes=("int32",),
+                   constraints="any shape; pure-jnp oracle")
+def _leaf_gather_ref(idx, leaf_values, *, prepadded=False, **_blocks):
+    return _ref.leaf_gather(idx, leaf_values)
+
+
+@registry.register("leaf_gather", "pallas", dtypes=("int32",),
+                   constraints="pads N/T to block multiples")
+def _leaf_gather_pallas(idx, leaf_values, *, block_n=128, block_t=16,
+                        prepadded=False):
+    if prepadded:
+        N = idx.shape[0]
+        Np = _round_up(max(N, 1), block_n)
+        idxp = _pad_dim(idx, 0, Np)
+        out = _gather_k.leaf_gather(idxp, leaf_values, block_n=block_n,
+                                    block_t=block_t, interpret=_interpret())
+        return out[:N]
     N, T = idx.shape
-    _, L, C = leaf_values.shape
     Np, Tp = _round_up(N, block_n), _round_up(T, block_t)
     idxp = _pad_dim(_pad_dim(idx, 0, Np), 1, Tp)
     lvp = _pad_dim(leaf_values, 0, Tp, kind="model")  # zero leaves: no-op trees
@@ -146,26 +255,27 @@ def leaf_gather(idx: jax.Array, leaf_values: jax.Array, *,
     return out[:N]
 
 
-def l2sq_rowwise(q: jax.Array, refs: jax.Array, *, backend: Backend = "auto",
-                 block_n: int = 256, block_k: int = 128) -> jax.Array:
-    """(K,), (N, K) -> (N,) squared L2 distances."""
-    if not _use_pallas(backend):
-        return _ref.l2sq_rowwise(q, refs)
-    N, K = refs.shape
-    Np, Kp = _round_up(N, block_n), _round_up(K, block_k)
-    qp = _pad_dim(q, 0, Kp)
-    rp = _pad_dim(_pad_dim(refs, 0, Np), 1, Kp)
-    out = _l2_k.l2sq_rowwise(qp, rp, block_n=block_n, block_k=block_k,
-                             interpret=_interpret())
-    return out[:N]
+# --------------------------------------------------------------------------
+# Registered implementations: l2sq (rank-dispatched rowwise / matrix)
+# --------------------------------------------------------------------------
+@registry.register("l2sq", "ref", dtypes=("float32",),
+                   constraints="rowwise (K,)x(N,K) or matrix (M,K)x(N,K)")
+def _l2sq_ref(a, b, **_blocks):
+    return _ref.l2sq_rowwise(a, b) if a.ndim == 1 else _ref.l2sq_matrix(a, b)
 
 
-def l2sq_matrix(a: jax.Array, b: jax.Array, *, backend: Backend = "auto",
-                block_m: int = 128, block_n: int = 128,
-                block_k: int = 128) -> jax.Array:
-    """(M, K), (N, K) -> (M, N) squared L2 distance matrix."""
-    if not _use_pallas(backend):
-        return _ref.l2sq_matrix(a, b)
+@registry.register("l2sq", "pallas", dtypes=("float32",),
+                   constraints="rowwise (K,)x(N,K) or matrix (M,K)x(N,K); "
+                               "pads to block multiples")
+def _l2sq_pallas(a, b, *, block_m=128, block_n=128, block_k=128):
+    if a.ndim == 1:
+        N, K = b.shape
+        Np, Kp = _round_up(N, block_n), _round_up(K, block_k)
+        qp = _pad_dim(a, 0, Kp)
+        rp = _pad_dim(_pad_dim(b, 0, Np), 1, Kp)
+        out = _l2_k.l2sq_rowwise(qp, rp, block_n=block_n, block_k=block_k,
+                                 interpret=_interpret())
+        return out[:N]
     M, K = a.shape
     N, _ = b.shape
     Mp, Np_, Kp = (_round_up(M, block_m), _round_up(N, block_n),
@@ -175,6 +285,118 @@ def l2sq_matrix(a: jax.Array, b: jax.Array, *, backend: Backend = "auto",
     out = _l2_k.l2sq_matrix(ap, bp, block_m=block_m, block_n=block_n,
                             block_k=block_k, interpret=_interpret())
     return out[:M, :N]
+
+
+# --------------------------------------------------------------------------
+# Registered implementations: fused_predict
+# --------------------------------------------------------------------------
+@registry.register("fused_predict", "ref", dtypes=("int32",),
+                   constraints="any shape; pure-jnp oracle")
+def _fused_ref(x, borders, sf, sb, lv, *, prepadded=False, **_blocks):
+    if prepadded:
+        x = _pad_dim(x, 1, borders.shape[1])
+    return _ref.fused_predict(x, borders, sf, sb, lv)
+
+
+@registry.register("fused_predict", "pallas", dtypes=("int32", "uint8"),
+                   constraints="pads N/T/F to block multiples; u8 bins "
+                               "scratch when <= 255 borders")
+def _fused_pallas(x, borders, sf, sb, lv, *, block_n=None, block_t=None,
+                  prepadded=False):
+    # uint8 scratch quarters the VMEM the binarized block occupies
+    # across tree blocks whenever the bin ids fit a byte — exact either
+    # way, so this is not a user-facing choice.
+    scratch = (jnp.uint8 if borders.shape[0] <= MAX_U8_BORDERS
+               else jnp.int32)
+    if prepadded:
+        N = x.shape[0]
+        Np = _round_up(max(N, 1), block_n)
+        xp = _pad_dim(_pad_dim(x, 0, Np), 1, borders.shape[1])
+        out = _fused_k.fused_predict(xp, borders, sf, sb, lv,
+                                     block_n=block_n, block_t=block_t,
+                                     interpret=_interpret(),
+                                     bins_scratch_dtype=scratch)
+        return out[:N]
+    N, F = x.shape
+    T, D = sf.shape
+    _, L, C = lv.shape
+    if block_n is None or block_t is None:
+        tn, tt = _tuning.best_fused_blocks(
+            F, D, L, C, borders.shape[0], n_rows=N, n_trees=T)
+        block_n = block_n or tn
+        block_t = block_t or tt
+    Np = _round_up(N, block_n)
+    Tp = _round_up(T, block_t)
+    Fp = _round_up(F, FEATURE_ALIGN)
+    xp = _pad_dim(_pad_dim(x, 0, Np), 1, Fp)
+    bp = _pad_dim(borders, 1, Fp, value=np.float32(np.inf), kind="model")
+    sfp = _pad_dim(sf, 0, Tp, kind="model")
+    sbp = _pad_dim(sb, 0, Tp, value=PAD_SPLIT_BIN, kind="model")
+    lvp = _pad_dim(lv, 0, Tp, kind="model")
+    out = _fused_k.fused_predict(xp, bp, sfp, sbp, lvp, block_n=block_n,
+                                 block_t=block_t, interpret=_interpret(),
+                                 bins_scratch_dtype=scratch)
+    return out[:N]
+
+
+# --------------------------------------------------------------------------
+# Public ops — legacy `backend=` kwargs as shims over registry dispatch
+# --------------------------------------------------------------------------
+def _bins_dtype(bins: jax.Array) -> str:
+    return "uint8" if bins.dtype == jnp.uint8 else "int32"
+
+
+def binarize(x: jax.Array, borders: jax.Array, *, backend: Backend = "auto",
+             block_n: int = 256, block_f: int = 128) -> jax.Array:
+    """(N, F) f32, (B, F) f32 -> (N, F) int32 bin indices."""
+    return registry.dispatch("binarize", backend, x, borders,
+                             block_n=block_n, block_f=block_f)
+
+
+def binarize_u8(x: jax.Array, borders: jax.Array, *,
+                backend: Backend = "auto", block_n: int = 256,
+                block_f: int = 128) -> jax.Array:
+    """(N, F) f32, (B, F) f32 -> (N, F) uint8 bin indices (B <= 255).
+
+    The quantized-pool representation: one byte per (sample, feature),
+    exactly the stream the paper's CalcIndexes loop consumes."""
+    return registry.dispatch("binarize", backend, x, borders,
+                             dtype="uint8", block_n=block_n,
+                             block_f=block_f)
+
+
+def leaf_index(bins: jax.Array, split_features: jax.Array,
+               split_bins: jax.Array, *, backend: Backend = "auto",
+               block_n: int = 256, block_t: int = 16) -> jax.Array:
+    """(N, F) i32|u8, (T, D) i32, (T, D) i32 -> (N, T) int32 leaf ids.
+
+    uint8 bins route to the u8 kernel variant automatically."""
+    return registry.dispatch("leaf_index", backend, bins, split_features,
+                             split_bins, dtype=_bins_dtype(bins),
+                             block_n=block_n, block_t=block_t)
+
+
+def leaf_gather(idx: jax.Array, leaf_values: jax.Array, *,
+                backend: Backend = "auto", block_n: int = 128,
+                block_t: int = 16) -> jax.Array:
+    """(N, T) i32, (T, L, C) f32 -> (N, C) f32 summed leaf values."""
+    return registry.dispatch("leaf_gather", backend, idx, leaf_values,
+                             block_n=block_n, block_t=block_t)
+
+
+def l2sq_rowwise(q: jax.Array, refs: jax.Array, *, backend: Backend = "auto",
+                 block_n: int = 256, block_k: int = 128) -> jax.Array:
+    """(K,), (N, K) -> (N,) squared L2 distances."""
+    return registry.dispatch("l2sq", backend, q, refs,
+                             block_n=block_n, block_k=block_k)
+
+
+def l2sq_matrix(a: jax.Array, b: jax.Array, *, backend: Backend = "auto",
+                block_m: int = 128, block_n: int = 128,
+                block_k: int = 128) -> jax.Array:
+    """(M, K), (N, K) -> (M, N) squared L2 distance matrix."""
+    return registry.dispatch("l2sq", backend, a, b, block_m=block_m,
+                             block_n=block_n, block_k=block_k)
 
 
 def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
@@ -190,28 +412,9 @@ def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
     `kernels.tuning` (the RVV-LMUL analog), sized to this ensemble and
     batch instead of a fixed (128, 16).
     """
-    if not _use_pallas(backend):
-        return _ref.fused_predict(x, borders, split_features, split_bins,
-                                  leaf_values)
-    N, F = x.shape
-    T, D = split_features.shape
-    _, L, C = leaf_values.shape
-    if block_n is None or block_t is None:
-        tn, tt = _tuning.best_fused_blocks(
-            F, D, L, C, borders.shape[0], n_rows=N, n_trees=T)
-        block_n = block_n or tn
-        block_t = block_t or tt
-    Np = _round_up(N, block_n)
-    Tp = _round_up(T, block_t)
-    Fp = _round_up(F, FEATURE_ALIGN)
-    xp = _pad_dim(_pad_dim(x, 0, Np), 1, Fp)
-    bp = _pad_dim(borders, 1, Fp, value=np.float32(np.inf), kind="model")
-    sfp = _pad_dim(split_features, 0, Tp, kind="model")
-    sbp = _pad_dim(split_bins, 0, Tp, value=PAD_SPLIT_BIN, kind="model")
-    lvp = _pad_dim(leaf_values, 0, Tp, kind="model")
-    out = _fused_k.fused_predict(xp, bp, sfp, sbp, lvp, block_n=block_n,
-                                 block_t=block_t, interpret=_interpret())
-    return out[:N]
+    return registry.dispatch("fused_predict", backend, x, borders,
+                             split_features, split_bins, leaf_values,
+                             block_n=block_n, block_t=block_t)
 
 
 # --------------------------------------------------------------------------
@@ -235,17 +438,10 @@ def fused_predict_prepadded(x: jax.Array, borders: jax.Array,
                             block_n: int = 128,
                             block_t: int = 16) -> jax.Array:
     """Fused predict on a prepadded model -> (N, C) f32."""
-    if not _use_pallas(backend):
-        xp = _pad_dim(x, 1, borders.shape[1])
-        return _ref.fused_predict(xp, borders, split_features, split_bins,
-                                  leaf_values)
-    N = x.shape[0]
-    Np = _round_up(max(N, 1), block_n)
-    xp = _pad_dim(_pad_dim(x, 0, Np), 1, borders.shape[1])
-    out = _fused_k.fused_predict(xp, borders, split_features, split_bins,
-                                 leaf_values, block_n=block_n,
-                                 block_t=block_t, interpret=_interpret())
-    return out[:N]
+    return registry.dispatch("fused_predict", backend, x, borders,
+                             split_features, split_bins, leaf_values,
+                             block_n=block_n, block_t=block_t,
+                             prepadded=True)
 
 
 def binarize_prepadded(x: jax.Array, borders: jax.Array, *,
@@ -256,17 +452,21 @@ def binarize_prepadded(x: jax.Array, borders: jax.Array, *,
     Keeps the padded feature columns (bins for +inf-border features are
     zero) so the downstream prepadded stages see an aligned F axis.
     """
-    Fp = borders.shape[1]
-    xp = _pad_dim(x, 1, Fp)
-    if not _use_pallas(backend):
-        return _ref.binarize(xp, borders)
-    N = x.shape[0]
-    Np = _round_up(max(N, 1), block_n)
-    xp = _pad_dim(xp, 0, Np)
-    out = _binarize_k.binarize(xp, borders, block_n=block_n,
-                               block_f=FEATURE_ALIGN,
-                               interpret=_interpret())
-    return out[:N]
+    return registry.dispatch("binarize", backend, x, borders,
+                             block_n=block_n, prepadded=True)
+
+
+def binarize_u8_prepadded(x: jax.Array, borders: jax.Array, *,
+                          backend: Backend = "auto",
+                          block_n: int = 256) -> jax.Array:
+    """Binarize against prepadded borders -> (N, Fp) uint8 (B <= 255).
+
+    The plan's quantize entry: same aligned-F contract as
+    `binarize_prepadded`, but emitting the one-byte quantized-pool
+    stream."""
+    return registry.dispatch("binarize", backend, x, borders,
+                             dtype="uint8", block_n=block_n,
+                             prepadded=True)
 
 
 def leaf_index_prepadded(bins: jax.Array, split_features: jax.Array,
@@ -274,27 +474,18 @@ def leaf_index_prepadded(bins: jax.Array, split_features: jax.Array,
                          backend: Backend = "auto", block_n: int = 256,
                          block_t: int = 16) -> jax.Array:
     """Leaf indices on prepadded splits -> (N, Tp) int32 (padded trees
-    land in leaf 0, which holds a zero leaf value)."""
-    if not _use_pallas(backend):
-        return _ref.leaf_index(bins, split_features, split_bins)
-    N = bins.shape[0]
-    Np = _round_up(max(N, 1), block_n)
-    binsp = _pad_dim(bins, 0, Np)
-    out = _index_k.leaf_index(binsp, split_features, split_bins,
-                              block_n=block_n, block_t=block_t,
-                              interpret=_interpret())
-    return out[:N]
+    land in leaf 0, which holds a zero leaf value).  Accepts int32 or
+    uint8 bins (the quantized-pool scoring path)."""
+    return registry.dispatch("leaf_index", backend, bins, split_features,
+                             split_bins, dtype=_bins_dtype(bins),
+                             block_n=block_n, block_t=block_t,
+                             prepadded=True)
 
 
 def leaf_gather_prepadded(idx: jax.Array, leaf_values: jax.Array, *,
                           backend: Backend = "auto", block_n: int = 128,
                           block_t: int = 16) -> jax.Array:
     """Sum prepadded leaf values at idx -> (N, C) f32."""
-    if not _use_pallas(backend):
-        return _ref.leaf_gather(idx, leaf_values)
-    N = idx.shape[0]
-    Np = _round_up(max(N, 1), block_n)
-    idxp = _pad_dim(idx, 0, Np)
-    out = _gather_k.leaf_gather(idxp, leaf_values, block_n=block_n,
-                                block_t=block_t, interpret=_interpret())
-    return out[:N]
+    return registry.dispatch("leaf_gather", backend, idx, leaf_values,
+                             block_n=block_n, block_t=block_t,
+                             prepadded=True)

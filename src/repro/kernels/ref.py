@@ -26,9 +26,27 @@ def binarize(x: jax.Array, borders: jax.Array) -> jax.Array:
     return jnp.sum(x[:, None, :] > borders[None, :, :], axis=1, dtype=jnp.int32)
 
 
+def binarize_u8(x: jax.Array, borders: jax.Array) -> jax.Array:
+    """`binarize` with the paper's actual bin representation: uint8.
+
+    CatBoost caps features at 255 borders precisely so the binarized
+    pool fits one byte per (sample, feature); requires B <= 255 (bin
+    ids span [0, B], so 255 is the largest id and still fits).
+    """
+    if borders.shape[0] > 255:
+        raise ValueError(f"uint8 bins need <= 255 borders, got "
+                         f"{borders.shape[0]} (see quantize.compute_borders"
+                         " max_bins cap)")
+    return binarize(x, borders).astype(jnp.uint8)
+
+
 def leaf_index(bins: jax.Array, split_features: jax.Array,
                split_bins: jax.Array) -> jax.Array:
-    """idx[n, t] = sum_d 2^d * [bins[n, sf[t, d]] >= sb[t, d]]  -> (N, T) int32."""
+    """idx[n, t] = sum_d 2^d * [bins[n, sf[t, d]] >= sb[t, d]]  -> (N, T) int32.
+
+    `bins` may be int32 or uint8 (the quantized-pool representation):
+    the comparison against int32 `split_bins` promotes, so one oracle
+    serves both bin streams."""
     T, D = split_features.shape
     gathered = bins[:, split_features.reshape(-1)].reshape(bins.shape[0], T, D)
     go_right = (gathered >= split_bins[None, :, :]).astype(jnp.int32)

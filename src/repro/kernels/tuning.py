@@ -30,15 +30,19 @@ def _align_score(*dims: int) -> float:
     return score
 
 
-def binarize_footprint(block_n: int, block_f: int, n_borders: int) -> int:
+def binarize_footprint(block_n: int, block_f: int, n_borders: int, *,
+                       bins_bytes: int = 4) -> int:
+    """`bins_bytes=1` models the uint8 bin stream (quantized pool /
+    u8 fused scratch): the output panel shrinks 4x."""
     x = block_n * block_f * 4
     borders = n_borders * block_f * 4
-    out = block_n * block_f * 4
+    out = block_n * block_f * bins_bytes
     return x + borders + out
 
 
-def leaf_index_footprint(block_n: int, block_t: int, F: int, D: int) -> int:
-    bins = block_n * F * 4
+def leaf_index_footprint(block_n: int, block_t: int, F: int, D: int, *,
+                         bins_bytes: int = 4) -> int:
+    bins = block_n * F * bins_bytes
     onehot = block_t * D * F * 4
     gathered = block_t * D * block_n * 4
     out = block_n * block_t * 4
@@ -54,9 +58,13 @@ def leaf_gather_footprint(block_n: int, block_t: int, L: int, C: int) -> int:
 
 
 def fused_footprint(block_n: int, block_t: int, F: int, D: int, L: int,
-                    C: int, n_borders: int) -> int:
-    return (binarize_footprint(block_n, F, n_borders)
-            + leaf_index_footprint(block_n, block_t, F, D)
+                    C: int, n_borders: int, *, bins_bytes: int = 4) -> int:
+    """`bins_bytes=1` models the u8 bins scratch the fused kernel uses
+    when the ensemble fits 255 borders (ops.py picks it automatically)."""
+    return (binarize_footprint(block_n, F, n_borders,
+                               bins_bytes=bins_bytes)
+            + leaf_index_footprint(block_n, block_t, F, D,
+                                   bins_bytes=bins_bytes)
             + leaf_gather_footprint(block_n, block_t, L, C))
 
 

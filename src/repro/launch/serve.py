@@ -34,8 +34,19 @@ def serve_gbdt(args):
     registry = ModelRegistry(max_batch=args.batch, config=config,
                              min_bucket=args.min_bucket)
     server = registry.register(args.dataset, ens)
+    # the multi-model shared-quantizer demo: K tree-slice variants of
+    # the model share its quantization schema, so predict_multi
+    # binarizes each batch once for all of them (at most one variant
+    # per tree)
+    n_variants = min(args.multi, ens.n_trees)
+    per = max(1, ens.n_trees // n_variants)
+    for i in range(1, n_variants):
+        registry.register(f"{args.dataset}-v{i}",
+                          ens.slice_trees(i * per,
+                                          min((i + 1) * per, ens.n_trees)))
     print(f"[serve:gbdt] model={args.dataset} plan={server.config} "
-          f"buckets={server.buckets}")
+          f"buckets={server.buckets} "
+          f"schema={server.schema_fingerprint}")
     t0 = time.perf_counter()
     n = 200
     for i in range(n):
@@ -43,6 +54,13 @@ def serve_gbdt(args):
     dt = time.perf_counter() - t0
     print(f"[serve:gbdt] {n} sequential requests in {dt:.2f}s; "
           f"batches={len(server.batcher.batch_sizes)}")
+    if args.multi > 1:
+        xs = ds.x_test[:min(len(ds.x_test), args.batch)]
+        t0 = time.perf_counter()
+        out = registry.predict_multi(xs)
+        dt = time.perf_counter() - t0
+        print(f"[serve:gbdt] predict_multi({len(xs)} rows x "
+              f"{len(out)} models, quantize-once) in {dt * 1e3:.1f}ms")
     print(f"[serve:gbdt] metrics: "
           f"{json.dumps(registry.metrics()[args.dataset], default=float)}")
     registry.close()
@@ -85,7 +103,16 @@ def main():
                     help="staged-path tree block (0 = whole ensemble)")
     ap.add_argument("--min-bucket", type=int, default=16,
                     help="smallest batch-size padding bucket")
+    ap.add_argument("--multi", type=int, default=1,
+                    help="register K schema-sharing model variants and "
+                         "demo the quantize-once predict_multi path")
+    ap.add_argument("--show-kernels", action="store_true",
+                    help="print the kernel registry table and exit")
     args = ap.parse_args()
+    if args.show_kernels:
+        from repro.kernels import registry as kernel_registry
+        print(kernel_registry.format_table())
+        return
     (serve_gbdt if args.mode == "gbdt" else serve_lm)(args)
 
 

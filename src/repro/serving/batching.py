@@ -57,6 +57,17 @@ def bucket_for(n: int, buckets: Sequence[int]) -> int:
                      f"{max(buckets)}; chunk it first")
 
 
+def chunks(n: int, size: int):
+    """(start, stop) ranges cutting n rows into `size`-row chunks — the
+    bulk paths (`predict_batch`, `predict_pool`) chunk oversized inputs
+    at the largest bucket with this so they share the online path's
+    compile cache."""
+    if size < 1:
+        raise ValueError(f"chunk size must be >= 1, got {size}")
+    for start in range(0, n, size):
+        yield start, min(start + size, n)
+
+
 def pad_rows(xs: np.ndarray, target: int) -> np.ndarray:
     """Zero-pad axis 0 of xs up to target rows (no-op when equal)."""
     n = xs.shape[0]

@@ -18,6 +18,7 @@ limitations).  Request aggregation and bucket padding live in
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -26,8 +27,10 @@ import numpy as np
 
 from repro.core import knn
 from repro.core.predictor import PredictConfig, Predictor, proba_from_raw
+from repro.core.quantize import QuantizedPool
 from repro.core.trees import ObliviousEnsemble
-from repro.serving.batching import Batcher, BucketedBatcher, Request  # noqa: F401  (re-export)
+from repro.serving.batching import (Batcher, BucketedBatcher,  # noqa: F401
+                                    Request, bucket_for, chunks)
 from repro.serving.metrics import ServerMetrics
 
 
@@ -45,6 +48,11 @@ class GBDTServer:
     Pass a `PredictConfig` as ``config``; the loose ``strategy`` /
     ``backend`` / ``tree_block`` / ``block_n`` / ``block_t`` kwargs are
     the deprecated equivalents kept for existing callers.
+
+    Quantized-first path: ``quantize(xs)`` binarizes a batch once into
+    a `QuantizedPool`; ``predict_pool(pool)`` scores it with zero
+    binarize work.  Servers whose models share a feature schema share
+    pools (see `ModelRegistry.predict_multi`).
     """
 
     def __init__(self, ensemble: ObliviousEnsemble, *,
@@ -129,13 +137,52 @@ class GBDTServer:
         """
         xs = np.asarray(xs, np.float32)
         if len(xs) == 0:
-            width = 2 if self.ensemble.n_outputs == 1 else \
-                self.ensemble.n_outputs
-            return np.zeros((0, width), np.float32)
+            return self._empty_proba()
         top = self.buckets[-1]
-        out = [self.batcher._run_batch(xs[start:start + top])
-               for start in range(0, len(xs), top)]
+        out = [self.batcher._run_batch(xs[start:stop])
+               for start, stop in chunks(len(xs), top)]
         return np.concatenate(out, axis=0)
+
+    # -- quantized-pool path (the shared-quantizer serving win) ------------
+    @property
+    def schema_fingerprint(self) -> str:
+        """Which `QuantizedPool`s this server may score; servers sharing
+        it share pools (ModelRegistry.predict_multi quantizes once per
+        distinct fingerprint)."""
+        return self.predictor.schema_fingerprint
+
+    def quantize(self, xs) -> QuantizedPool:
+        """Binarize a batch once for reuse across predicts/servers."""
+        return self.predictor.quantize(np.asarray(xs, np.float32))
+
+    def predict_pool(self, pool: QuantizedPool) -> np.ndarray:
+        """Synchronous bulk scoring of a pre-quantized pool: binarize
+        never runs.  Chunks at the largest bucket and pads each chunk
+        up to a bucket, so retraces stay bounded by the bucket count
+        exactly like the float path; each chunk is recorded in
+        `metrics` the same way the batcher records float batches."""
+        if self._sharded is not None:
+            raise ValueError("pool scoring is not supported on mesh "
+                             "servers (the sharded pipeline binarizes "
+                             "per tree shard)")
+        if len(pool) == 0:
+            return self._empty_proba()
+        top = self.buckets[-1]
+        out = []
+        for start, stop in chunks(len(pool), top):
+            chunk = pool.slice_rows(start, stop)
+            bucket = bucket_for(len(chunk), self.buckets)
+            t0 = time.perf_counter()
+            ys = np.asarray(self.predictor.proba(chunk.pad_rows(bucket)))
+            self.metrics.note_batch(len(chunk), bucket,
+                                    time.perf_counter() - t0)
+            out.append(ys[:len(chunk)])
+        return np.concatenate(out, axis=0)
+
+    def _empty_proba(self) -> np.ndarray:
+        width = 2 if self.ensemble.n_outputs == 1 else \
+            self.ensemble.n_outputs
+        return np.zeros((0, width), np.float32)
 
     def close(self):
         self.batcher.close()
@@ -194,6 +241,36 @@ class ModelRegistry:
 
     def predict_batch(self, name: str, xs: np.ndarray) -> np.ndarray:
         return self.get(name).predict_batch(xs)
+
+    def predict_multi(self, xs: np.ndarray,
+                      names: Optional[Sequence[str]] = None
+                      ) -> dict[str, np.ndarray]:
+        """Score one batch through several models, quantizing once per
+        feature schema.
+
+        Servers whose ensembles share borders (same
+        `schema_fingerprint`) get the batch binarized a single time —
+        the `QuantizedPool` is then scored through each plan's
+        pool path, which skips binarize entirely.  This is the
+        quantize-once/score-many serving pattern the quantized-first
+        API exists for (multi-model registries routinely serve model
+        variants trained on one quantized dataset).  Mesh servers
+        don't support pool scoring and fall back to the float path.
+        """
+        if names is None:
+            names = self.names()
+        targets = [(n, self.get(n)) for n in names]
+        pools: dict[str, QuantizedPool] = {}
+        out: dict[str, np.ndarray] = {}
+        for name, server in targets:
+            if server.mesh is not None:
+                out[name] = server.predict_batch(xs)
+                continue
+            fp = server.schema_fingerprint
+            if fp not in pools:
+                pools[fp] = server.quantize(xs)
+            out[name] = server.predict_pool(pools[fp])
+        return out
 
     def metrics(self) -> dict[str, dict[str, Any]]:
         return {n: s.metrics.snapshot() for n, s in self._servers.items()}

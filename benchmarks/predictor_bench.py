@@ -24,20 +24,36 @@ models sharing one feature schema score the same batch.  The float
 path binarizes K times per batch; `ModelRegistry.predict_multi`
 quantizes once and scores K pools.
 
-Emits the same ``name,us_per_call,derived`` CSV rows as benchmarks.run.
+Scenario 4 (``run_layouts``) sweeps the physical model layouts
+(`core.layout`: soa / depth_major / depth_grouped) over a mixed-depth
+covertype-style ensemble — the shape `depth_grouped` exists for: its
+shallow trees carry 2^d-entry leaf tables instead of 2^Dmax, so both
+the leaf-index and leaf-gather passes do measurably less work.  Every
+layout is parity-gated against the jnp reference.
+
+Emits the same ``name,us_per_call,derived`` CSV rows as benchmarks.run,
+and (unless ``--no-write``) one JSON per scenario into
+``results/perf/`` — timestamp, scenario, layout and timing fields — so
+future PRs can diff performance against this one.
 With ``--check`` the process exits nonzero unless (a) the prepared path
 is at least at parity with the *best* legacy row and (b) the
-prequantized paths match the float paths exactly (the parity gates for
-the plan and pool APIs never regressing).
+prequantized paths match the float paths exactly and (c) every lowered
+layout matches the reference on the mixed-depth ensemble (the parity
+gates for the plan, pool and layout APIs never regressing).
 
   PYTHONPATH=src python -m benchmarks.predictor_bench [--quick] [--check]
 """
 from __future__ import annotations
 
 import argparse
+import datetime
+import json
+import pathlib
 import sys
 
 import numpy as np
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[1] / "results" / "perf"
 
 
 def eprint(*a):
@@ -173,17 +189,95 @@ def run_registry(n_trees: int, batch: int, iters: int,
         registry.close()
 
 
+def _mixed_depth_variant(ens, cycle=(2, 3, 4, None)):
+    """A covertype-style mixed-depth ensemble: tree t is truncated to
+    depth cycle[t % len] (None = keep full depth) through the canonical
+    `trees.truncate_tree_depths` (trailing always-left pads)."""
+    from repro.core.trees import truncate_tree_depths
+
+    depths = [ens.depth if cycle[t % len(cycle)] is None
+              else min(cycle[t % len(cycle)], ens.depth)
+              for t in range(ens.n_trees)]
+    return truncate_tree_depths(ens, depths)
+
+
+def run_layouts(n_trees: int, batch: int, iters: int) -> dict[str, dict]:
+    """Physical-layout sweep on a mixed-depth ensemble.
+
+    Scores a pre-quantized pool (the paper's evaluators never re-touch
+    float features), so the timings isolate exactly the passes the
+    layouts reorganize — leaf index + leaf gather — instead of being
+    diluted by the layout-independent binarize.  Returns per-layout
+    ``{us_per_call, max_abs_err, leaf_table_bytes, lower_time_s}`` —
+    the parity + depth_grouped-wins evidence the lowering layer is
+    gated on."""
+    import jax.numpy as jnp
+
+    from benchmarks.serving_bench import _build_model
+    from repro.core.layout import LAYOUT_NAMES
+    from repro.core.predictor import PredictConfig, Predictor
+    from repro.kernels import ref
+
+    ens, ds = _build_model(n_trees)
+    ens = _mixed_depth_variant(ens)
+    xs = np.asarray(ds.x_test, np.float32)
+    while len(xs) < batch:
+        xs = np.concatenate([xs, xs])
+    x = jnp.asarray(xs[:batch])
+    want = np.asarray(ens.base_score)[None, :] + np.asarray(
+        ref.fused_predict(x, ens.borders, ens.split_features,
+                          ens.split_bins, ens.leaf_values))
+
+    plans = {name: Predictor.build(
+        ens, PredictConfig(strategy="staged", backend="ref", layout=name),
+        expected_batch=batch) for name in LAYOUT_NAMES}
+    # one pool for all plans: identical borders -> identical fingerprint
+    pool = next(iter(plans.values())).quantize(x)
+    times = _timed_paths({n: (lambda _x, p=p: p.raw(pool))
+                          for n, p in plans.items()}, x, iters)
+    out: dict[str, dict] = {}
+    for name, plan in plans.items():
+        err = float(np.max(np.abs(np.asarray(plan.raw(pool)) - want)))
+        out[name] = {
+            "us_per_call": float(np.median(times[name])) * 1e6,
+            "max_abs_err": err,
+            "leaf_table_bytes": plan.lowered.leaf_table_bytes(),
+            "lower_time_s": plan.stats["lower_time_s"],
+        }
+    return out
+
+
+def _write_scenario_json(out_dir: pathlib.Path, name: str, scenario: str,
+                         layout: str, fields: dict) -> None:
+    """One JSON per scenario under results/perf/ — the perf trajectory
+    future PRs diff against (timestamp + scenario + layout + timings)."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "scenario": scenario,
+        "layout": layout,
+        **fields,
+    }
+    (out_dir / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--check", action="store_true",
                     help="exit 1 if the prepared path is below parity "
                          "with the best legacy path, or if a quantized "
-                         "path diverges from its float path")
+                         "path diverges from its float path, or if a "
+                         "lowered layout diverges from the reference")
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--models", type=int, default=4,
                     help="K models sharing a schema in the registry "
                          "scenario")
+    ap.add_argument("--out-dir", default=str(RESULTS_DIR),
+                    help="where the per-scenario result JSONs go")
+    ap.add_argument("--no-write", action="store_true",
+                    help="skip writing result JSONs")
     args = ap.parse_args()
 
     n_trees = 30 if args.quick else 100
@@ -194,6 +288,7 @@ def main() -> int:
     res = run(n_trees, batch, iters)
     qres = run_quantized(n_trees, batch, iters)
     rres = run_registry(n_trees, batch, iters, n_models)
+    lres = run_layouts(n_trees, batch, iters)
     # parity gate on the median per-round prepared-vs-jitted-legacy
     # ratio; >= 0.66 (prepared within 1.5x) tolerates dispatch jitter on
     # loaded CI boxes while still catching a reintroduced per-call model
@@ -202,6 +297,14 @@ def main() -> int:
     # the quantized paths are the same math: exact-ish parity, gated
     q_parity = (qres["max_abs_err"] < 1e-4
                 and rres["max_abs_err"] < 1e-4)
+    # every lowered layout is the same math as the logical model: soa
+    # and depth_major must be BIT-identical to the reference on the ref
+    # backend (integer-exact one-hot matmuls); depth_grouped
+    # reassociates the tree sum (same addends, per-depth order), hence
+    # float tolerance for it alone
+    l_parity = (lres["soa"]["max_abs_err"] == 0.0
+                and lres["depth_major"]["max_abs_err"] == 0.0
+                and lres["depth_grouped"]["max_abs_err"] < 1e-4)
 
     eprint(f"# predictor bench: batch={batch}, {n_trees} trees, "
            f"{iters} interleaved rounds, ref backend")
@@ -223,6 +326,16 @@ def main() -> int:
     eprint(f"quantized-path parity: max |err| = "
            f"{max(qres['max_abs_err'], rres['max_abs_err']):.2e} "
            f"({'OK' if q_parity else 'MISMATCH'})")
+    eprint(f"# layout sweep (mixed-depth ensemble, staged/ref)")
+    soa_us = lres["soa"]["us_per_call"]
+    for name, v in lres.items():
+        eprint(f"{name:16s} {v['us_per_call']:10.1f} us/call "
+               f"({soa_us / v['us_per_call']:5.2f}x vs soa, "
+               f"leaf table {v['leaf_table_bytes'] / 1024:.0f} KiB, "
+               f"err {v['max_abs_err']:.1e})")
+    eprint(f"layout parity: {'OK' if l_parity else 'MISMATCH'}; "
+           f"depth_grouped vs soa: "
+           f"{soa_us / lres['depth_grouped']['us_per_call']:.2f}x")
 
     print("name,us_per_call,derived")
     for name in ("kwarg", "kwarg-jit", "prepared"):
@@ -234,12 +347,48 @@ def main() -> int:
     for name in (fkey, pkey):
         print(f"predictor/{name},{rres[name] * 1e6:.1f},"
               f"speedup_vs_float={rres[fkey] / rres[name]:.2f}")
+    for name, v in lres.items():
+        print(f"layout/{name},{v['us_per_call']:.1f},"
+              f"speedup_vs_soa={soa_us / v['us_per_call']:.2f}")
+
+    if not args.no_write:
+        out_dir = pathlib.Path(args.out_dir)
+        common = {"batch": batch, "n_trees": n_trees, "iters": iters,
+                  "backend": "ref", "quick": bool(args.quick)}
+        _write_scenario_json(
+            out_dir, "predictor-bench__prepared", "prepared-plan", "auto",
+            {**common, "us_per_call": res["prepared"] * 1e6,
+             "speedup_vs_kwarg": res["kwarg"] / res["prepared"],
+             "parity_ratio_vs_jitted_legacy": res["parity_ratio"]})
+        _write_scenario_json(
+            out_dir, "predictor-bench__prequantized", "prequantized",
+            "auto",
+            {**common, "us_per_call": qres["prequantized"] * 1e6,
+             "speedup_vs_float": (qres["prepared-float"]
+                                  / qres["prequantized"]),
+             "max_abs_err": qres["max_abs_err"]})
+        _write_scenario_json(
+            out_dir, "predictor-bench__registry-multi", "registry-multi",
+            "auto",
+            {**common, "n_models": n_models,
+             "us_per_batch": rres[pkey] * 1e6,
+             "speedup_vs_float": rres[fkey] / rres[pkey],
+             "max_abs_err": rres["max_abs_err"]})
+        for name, v in lres.items():
+            _write_scenario_json(
+                out_dir, f"layout-sweep__{name}", "layout-sweep", name,
+                {**common, **v,
+                 "speedup_vs_soa": soa_us / v["us_per_call"]})
+        eprint(f"# wrote result JSONs to {out_dir}")
 
     if args.check and not parity:
         eprint("FAIL: prepared plan slower than the kwarg path it replaces")
         return 1
     if args.check and not q_parity:
         eprint("FAIL: quantized path diverges from the float path")
+        return 1
+    if args.check and not l_parity:
+        eprint("FAIL: a lowered layout diverges from the reference")
         return 1
     return 0
 

@@ -42,18 +42,34 @@ python -c "from repro.kernels import registry; rows = registry.table(); \
   assert all(any(r['op'] == op for r in rows) for op in registry.CORE_OPS); \
   print(registry.format_table())"
 
+echo "== layout capability smoke (every layout covers the ops it claims) =="
+python - <<'EOF'
+from repro.core import layout
+from repro.kernels import registry
+
+for name, spec in layout.LAYOUTS.items():
+    for op in spec.claimed_ops:
+        impls = registry.impls_for_layout(op, name)
+        assert impls, f"layout {name} claims op {op} but no impl consumes it"
+assert "layouts" in registry.format_table().splitlines()[0]
+print(layout.format_layout_table())
+EOF
+
 echo "== quickstart example =="
 python examples/quickstart.py
 
 echo "== serving benchmark (quick) =="
 python -m benchmarks.serving_bench --quick >/dev/null
 
-echo "== predictor smoke benchmark (prepared / prequantized / registry) =="
+echo "== predictor smoke benchmark (prepared / prequantized / registry / layouts) =="
 # --check fails the build if the prepared-plan path is below parity
-# with the kwarg path it replaced, or if a quantized scenario
+# with the kwarg path it replaced, if a quantized scenario
 # (prepared+prequantized vs prepared-float, quantize-once score-many
 # over ModelRegistry) diverges from its float path (ref backend, so
-# same kernel math).
-python -m benchmarks.predictor_bench --quick --check >/dev/null
+# same kernel math), or if any lowered layout (soa / depth_major /
+# depth_grouped swept over a mixed-depth ensemble) diverges from the
+# jnp reference — the layout parity gate.  --no-write keeps CI runs
+# from clobbering the committed results/perf/ trajectory.
+python -m benchmarks.predictor_bench --quick --check --no-write >/dev/null
 
 echo "CI OK"

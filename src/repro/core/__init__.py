@@ -3,8 +3,9 @@
 Compiled-plan prediction lives in `predictor` (`PredictConfig` +
 `Predictor`, the prepare-once API); `predict` keeps the legacy kwarg
 shims.  Training substrate in `boosting`; model structure in `trees`;
-KNN embedding features in `knn`.
+physical model layouts (the lowering layer between plans and kernels)
+in `layout`; KNN embedding features in `knn`.
 """
-from repro.core import (boosting, knn, losses, predict, predictor,  # noqa: F401
-                        quantize, trees)
+from repro.core import (boosting, knn, layout, losses, predict,  # noqa: F401
+                        predictor, quantize, trees)
 from repro.core.predictor import PredictConfig, Predictor  # noqa: F401

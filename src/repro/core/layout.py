@@ -1,0 +1,436 @@
+"""Physical ensemble layouts: the lowering layer between Predictor
+plans and kernels.
+
+The paper's biggest wins come from reorganizing how oblivious trees are
+laid out for the vector unit — hoisting the per-depth pow2 vector out of
+the CalcIndexes loop, grouping trees into blocks
+(`CalcTreesBlockedImpl`), and streaming the binarized features in the
+order the loop consumes them — not from any single intrinsic.  This
+module makes that reorganization a first-class compilation step: a
+logical `ObliviousEnsemble` is lowered **once** (at `Predictor.build`
+time) into a `LoweredEnsemble`, a registered pytree whose arrays are in
+the physical order a kernel family wants, pre-padded to that family's
+block contracts.  Kernels consume lowered arrays; plans store them; the
+tuner picks among them from the ensemble's shape.
+
+Three layouts:
+
+  soa            today's structure-of-arrays — (T, D) splits, one
+                 (T, 2^Dmax, C) leaf table — the compatibility default.
+  depth_major    splits transposed to (D, T) bit-plane order with the
+                 one-hot feature-gather matrix onehot(sf) (T, D, F) and
+                 the per-depth pow2 vector precomputed at lower time:
+                 leaf_index kernels run a straight matmul instead of
+                 rebuilding iota/one-hot per call (the paper's hoisting
+                 trick applied to model structure).
+  depth_grouped  trees bucketed by *true* depth — a depth-4 tree
+                 carries a 16-entry leaf table instead of 2^Dmax —
+                 evaluated group-by-group through the soa kernels and
+                 summed (the paper's equal-depth tree grouping,
+                 CalcTreesBlockedImpl at depth granularity).  Note the
+                 per-group summation reassociates the float tree sum
+                 (same addends, different order).
+
+Every layout is bit-for-bit the same *math* as the logical model:
+identical leaf indices, identical per-tree leaf values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.ops import FEATURE_ALIGN, PAD_SPLIT_BIN
+
+# T-axis alignment of the prepadded staged path (the leaf_index /
+# leaf_gather kernels' default tree block).  Canonical definition —
+# `core.predictor` re-exports it.
+STAGED_TREE_ALIGN = 16
+
+
+def is_concrete(ensemble) -> bool:
+    """Whether the ensemble's structure arrays are concrete (lowerings
+    that regroup trees need to *read* split_bins; per-shard plans built
+    inside shard_map hold tracers and must stay on "soa")."""
+    return not isinstance(ensemble.split_bins, jax.core.Tracer)
+
+
+# --------------------------------------------------------------------------
+# Lowered layouts (registered pytrees; unflatten bypasses __init__ so
+# tree ops never re-run lowering-time logic — same scheme as
+# `trees.ObliviousEnsemble`)
+# --------------------------------------------------------------------------
+def _register_lowered(cls, data_fields: tuple[str, ...],
+                      meta_fields: tuple[str, ...] = ()):
+    def flatten_with_keys(obj):
+        children = tuple((jax.tree_util.GetAttrKey(f), getattr(obj, f))
+                         for f in data_fields)
+        return children, tuple(getattr(obj, f) for f in meta_fields)
+
+    def flatten(obj):
+        return (tuple(getattr(obj, f) for f in data_fields),
+                tuple(getattr(obj, f) for f in meta_fields))
+
+    def unflatten(aux, children):
+        obj = object.__new__(cls)
+        for f, c in zip(data_fields, children):
+            object.__setattr__(obj, f, c)
+        for f, v in zip(meta_fields, aux):
+            object.__setattr__(obj, f, v)
+        return obj
+
+    jax.tree_util.register_pytree_with_keys(cls, flatten_with_keys,
+                                            unflatten, flatten)
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class SoaLayout:
+    """Structure-of-arrays, a single shared depth (today's layout)."""
+    layout_name = "soa"
+    borders: jax.Array           # (B, Fp) f32
+    split_features: jax.Array    # (Tp, D) i32
+    split_bins: jax.Array        # (Tp, D) i32
+    leaf_values: jax.Array       # (Tp, L, C) f32
+    # staged tree blocking: per-block (sf, sb, lv) slices, pre-cut and
+    # pre-padded at lower time so the per-call loop never touches jnp.pad
+    tree_blocks: Optional[tuple] = None
+    n_outputs: int = 1           # static
+    n_model_pads: int = 0        # static: model-side pads spent lowering
+
+    def leaf_sum(self, bins: jax.Array, *, backend: str,
+                 block_t: int) -> jax.Array:
+        if self.tree_blocks is not None:
+            # CalcTreesBlockedImpl with the block slices cut at lower time
+            acc = jnp.zeros((bins.shape[0], self.n_outputs), jnp.float32)
+            for sf, sb, lv in self.tree_blocks:
+                idx = ops.leaf_index_prepadded(bins, sf, sb,
+                                               backend=backend,
+                                               block_t=block_t)
+                acc = acc + ops.leaf_gather_prepadded(idx, lv,
+                                                      backend=backend,
+                                                      block_t=block_t)
+            return acc
+        idx = ops.leaf_index_prepadded(bins, self.split_features,
+                                       self.split_bins, backend=backend,
+                                       block_t=block_t)
+        return ops.leaf_gather_prepadded(idx, self.leaf_values,
+                                         backend=backend, block_t=block_t)
+
+    def fused_raw(self, x: jax.Array, *, backend: str, block_n: int,
+                  block_t: int) -> jax.Array:
+        return ops.fused_predict_prepadded(
+            x, self.borders, self.split_features, self.split_bins,
+            self.leaf_values, backend=backend, block_n=block_n,
+            block_t=block_t)
+
+    def leaf_table_bytes(self) -> int:
+        return int(np.prod(self.leaf_values.shape)) * 4
+
+    def describe(self) -> dict[str, Any]:
+        return {"layout": self.layout_name,
+                "leaf_table_bytes": self.leaf_table_bytes(),
+                "tree_blocks": (len(self.tree_blocks)
+                                if self.tree_blocks else 0)}
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthMajorLayout:
+    """Bit-plane order with the feature-gather one-hot precomputed."""
+    layout_name = "depth_major"
+    borders: jax.Array           # (B, Fp) f32
+    onehot: jax.Array            # (Tp, D, Fp) f32 — onehot(sf[t, d])
+    split_bins_dm: jax.Array     # (D, Tp) i32 — bit-plane transposed
+    pow2: jax.Array              # (D, 1) f32 — hoisted 2^d vector
+    leaf_values: jax.Array       # (Tp, L, C) f32
+    n_outputs: int = 1           # static
+    n_model_pads: int = 0        # static
+
+    def leaf_sum(self, bins: jax.Array, *, backend: str,
+                 block_t: int) -> jax.Array:
+        idx = ops.leaf_index_dm_prepadded(bins, self.onehot,
+                                          self.split_bins_dm, self.pow2,
+                                          backend=backend, block_t=block_t)
+        return ops.leaf_gather_prepadded(idx, self.leaf_values,
+                                         backend=backend, block_t=block_t)
+
+    def fused_raw(self, x: jax.Array, *, backend: str, block_n: int,
+                  block_t: int) -> jax.Array:
+        return ops.fused_predict_dm_prepadded(
+            x, self.borders, self.onehot, self.split_bins_dm, self.pow2,
+            self.leaf_values, backend=backend, block_n=block_n,
+            block_t=block_t)
+
+    def leaf_table_bytes(self) -> int:
+        return int(np.prod(self.leaf_values.shape)) * 4
+
+    def onehot_bytes(self) -> int:
+        return int(np.prod(self.onehot.shape)) * 4
+
+    def describe(self) -> dict[str, Any]:
+        return {"layout": self.layout_name,
+                "leaf_table_bytes": self.leaf_table_bytes(),
+                "onehot_bytes": self.onehot_bytes()}
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthGroup:
+    """All trees of one true depth, sliced to that depth's shapes."""
+    depth: int                   # static: true depth d of the group
+    split_features: jax.Array    # (Tg_p, d) i32
+    split_bins: jax.Array        # (Tg_p, d) i32
+    leaf_values: jax.Array       # (Tg_p, 2^d, C) f32
+
+    @property
+    def n_trees(self) -> int:
+        return self.split_features.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthGroupedLayout:
+    """Trees bucketed by true depth; shallow trees carry small tables."""
+    layout_name = "depth_grouped"
+    borders: jax.Array           # (B, Fp) f32
+    groups: tuple                # tuple[DepthGroup, ...], depth ascending
+    n_outputs: int = 1           # static
+    n_model_pads: int = 0        # static
+
+    def leaf_sum(self, bins: jax.Array, *, backend: str,
+                 block_t: int) -> jax.Array:
+        acc = jnp.zeros((bins.shape[0], self.n_outputs), jnp.float32)
+        for g in self.groups:
+            idx = ops.leaf_index_prepadded(bins, g.split_features,
+                                           g.split_bins, backend=backend,
+                                           block_t=block_t)
+            acc = acc + ops.leaf_gather_prepadded(idx, g.leaf_values,
+                                                  backend=backend,
+                                                  block_t=block_t)
+        return acc
+
+    def fused_raw(self, x: jax.Array, *, backend: str, block_n: int,
+                  block_t: int) -> jax.Array:
+        # Running the fused kernel once per group would re-execute its
+        # stage 1 (binarize x against every border) G times — exactly
+        # the work the grouping is supposed to shrink.  Binarize once
+        # and reuse the grouped index+gather loop instead; with more
+        # than one group this strictly dominates per-group fusion.
+        bins = ops.binarize_prepadded(x, self.borders, backend=backend)
+        return self.leaf_sum(bins, backend=backend, block_t=block_t)
+
+    def leaf_table_bytes(self) -> int:
+        return sum(int(np.prod(g.leaf_values.shape)) * 4
+                   for g in self.groups)
+
+    def describe(self) -> dict[str, Any]:
+        return {"layout": self.layout_name,
+                "leaf_table_bytes": self.leaf_table_bytes(),
+                "groups": {int(g.depth): int(g.n_trees)
+                           for g in self.groups}}
+
+
+_register_lowered(SoaLayout,
+                  ("borders", "split_features", "split_bins",
+                   "leaf_values", "tree_blocks"),
+                  ("n_outputs", "n_model_pads"))
+_register_lowered(DepthMajorLayout,
+                  ("borders", "onehot", "split_bins_dm", "pow2",
+                   "leaf_values"),
+                  ("n_outputs", "n_model_pads"))
+_register_lowered(DepthGroup,
+                  ("split_features", "split_bins", "leaf_values"),
+                  ("depth",))
+_register_lowered(DepthGroupedLayout,
+                  ("borders", "groups"),
+                  ("n_outputs", "n_model_pads"))
+
+# The union type plans hold.
+LoweredEnsemble = SoaLayout | DepthMajorLayout | DepthGroupedLayout
+
+
+# --------------------------------------------------------------------------
+# Layout registry (capability metadata for tuning / docs / CI)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayoutSpec:
+    name: str
+    cls: type
+    paper_analog: str            # which paper mechanism it encodes
+    claimed_ops: tuple[str, ...]  # kernel ops the layout needs impls for
+    memory: str                  # memory-cost note (docs table)
+    when: str                    # when the tuner picks it
+
+LAYOUTS: dict[str, LayoutSpec] = {
+    "soa": LayoutSpec(
+        name="soa", cls=SoaLayout,
+        paper_analog="CatBoost SoA model arrays (compatibility default)",
+        claimed_ops=("binarize", "leaf_index", "leaf_gather",
+                     "fused_predict"),
+        memory="T x 2^Dmax x C leaf table; (T, D) splits",
+        when="uniform shallow models; tracer ensembles (sharded shards)"),
+    "depth_major": LayoutSpec(
+        name="depth_major", cls=DepthMajorLayout,
+        paper_analog="hoisted pow2 / vmsgeu bit-plane loop (CalcIndexes)",
+        claimed_ops=("binarize", "leaf_index", "leaf_gather",
+                     "fused_predict"),
+        memory="soa + T x D x F f32 one-hot gather matrix",
+        when="uniform-depth models whose one-hot matrix fits the budget"),
+    "depth_grouped": LayoutSpec(
+        name="depth_grouped", cls=DepthGroupedLayout,
+        paper_analog="equal-depth tree grouping (CalcTreesBlockedImpl)",
+        claimed_ops=("binarize", "leaf_index", "leaf_gather",
+                     "fused_predict"),
+        memory="sum_d T_d x 2^d x C leaf tables (< soa when depths mix)",
+        when="mixed true depths with enough shallow-tree savings"),
+}
+
+LAYOUT_NAMES = tuple(LAYOUTS)
+
+
+def format_layout_table() -> str:
+    """The layout matrix as a markdown table (docs/layouts.md embeds
+    this; `launch.serve --show-kernels` prints it)."""
+    cols = ("layout", "paper analog", "memory cost", "when tuning picks it")
+    rows = [(s.name, s.paper_analog, s.memory, s.when)
+            for s in LAYOUTS.values()]
+    widths = [max(len(c), *(len(r[i]) for r in rows))
+              for i, c in enumerate(cols)]
+    def line(vals):
+        return "| " + " | ".join(v.ljust(w)
+                                 for v, w in zip(vals, widths)) + " |"
+    out = [line(cols), "|" + "|".join("-" * (w + 2) for w in widths) + "|"]
+    out += [line(r) for r in rows]
+    return "\n".join(out)
+
+
+# --------------------------------------------------------------------------
+# Lowering
+# --------------------------------------------------------------------------
+def lower(ensemble, layout: str = "soa", *, backend: str = "ref",
+          t_align: int = STAGED_TREE_ALIGN,
+          tree_block: int = 0) -> LoweredEnsemble:
+    """Lower a logical `ObliviousEnsemble` into one physical layout.
+
+    The one-time step `Predictor.build` runs: every model-side pad
+    (feature axis to the lane width for pallas, tree axis to the kernel
+    block) and every structure-derived array (one-hot gather matrix,
+    bit-plane transposes, depth groups) is materialized here, so the
+    per-call kernels only ever touch data-side padding.
+
+    `backend` decides the padding contract ("pallas" pads to block
+    multiples; anything else keeps exact shapes — the jnp reference
+    kernels accept any shape, so padding would only add wasted math).
+    `t_align` is the tree-axis block (the fused plan's block_t, or
+    `STAGED_TREE_ALIGN`); `tree_block` enables the staged soa
+    tree-blocked loop (soa layout only).
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; known: "
+                         f"{LAYOUT_NAMES}")
+    ctx = _LowerCtx(pallas=backend == "pallas", t_align=t_align)
+    if layout == "soa":
+        return _lower_soa(ensemble, ctx, tree_block)
+    if layout == "depth_major":
+        return _lower_depth_major(ensemble, ctx)
+    return _lower_depth_grouped(ensemble, ctx)
+
+
+class _LowerCtx:
+    """Pad helper counting model-side pad ops locally (the global
+    `ops.pad_stats` counter may tick from other threads concurrently)."""
+
+    def __init__(self, *, pallas: bool, t_align: int):
+        self.pallas = pallas
+        self.t_align = max(int(t_align), 1)
+        self.n_pads = 0
+
+    def pad(self, a, axis, target, value=0):
+        out = ops._pad_dim(a, axis, target, value=value, kind="model")
+        if out is not a:
+            self.n_pads += 1
+        return out
+
+    def pad_borders(self, borders):
+        if not self.pallas:
+            return borders
+        fp = ops._round_up(max(borders.shape[1], 1), FEATURE_ALIGN)
+        return self.pad(borders, 1, fp, value=np.float32(np.inf))
+
+    def pad_trees(self, sf, sb, lv):
+        if not self.pallas:
+            return sf, sb, lv
+        tp = ops._round_up(max(sf.shape[0], 1), self.t_align)
+        return (self.pad(sf, 0, tp), self.pad(sb, 0, tp,
+                                              value=PAD_SPLIT_BIN),
+                self.pad(lv, 0, tp))
+
+
+def _lower_soa(ensemble, ctx: _LowerCtx, tree_block: int) -> SoaLayout:
+    borders = ctx.pad_borders(ensemble.borders)
+    if tree_block and ensemble.n_trees > tree_block:
+        blocks = []
+        for start in range(0, ensemble.n_trees, tree_block):
+            blk = ensemble.slice_trees(
+                start, min(start + tree_block, ensemble.n_trees))
+            blocks.append(ctx.pad_trees(blk.split_features, blk.split_bins,
+                                        blk.leaf_values))
+        # the blocked path never reads the whole-ensemble arrays, so keep
+        # the (unpadded) originals rather than holding a second padded
+        # copy of the full model
+        return SoaLayout(borders, ensemble.split_features,
+                         ensemble.split_bins, ensemble.leaf_values,
+                         tuple(blocks), n_outputs=ensemble.n_outputs,
+                         n_model_pads=ctx.n_pads)
+    sf, sb, lv = ctx.pad_trees(ensemble.split_features, ensemble.split_bins,
+                               ensemble.leaf_values)
+    return SoaLayout(borders, sf, sb, lv, None,
+                     n_outputs=ensemble.n_outputs, n_model_pads=ctx.n_pads)
+
+
+def _lower_depth_major(ensemble, ctx: _LowerCtx) -> DepthMajorLayout:
+    borders = ctx.pad_borders(ensemble.borders)
+    sf, sb, lv = ctx.pad_trees(ensemble.split_features, ensemble.split_bins,
+                               ensemble.leaf_values)
+    D = ensemble.depth
+    Fp = borders.shape[1]
+    # The per-call iota/one-hot the soa kernels rebuild, materialized
+    # once: row (t, d) of the gather matrix selects feature sf[t, d].
+    f_ids = jnp.arange(Fp, dtype=jnp.int32)[None, None, :]
+    onehot = (f_ids == sf[:, :, None]).astype(jnp.float32)   # (Tp, D, Fp)
+    pow2 = jnp.asarray((1 << np.arange(D, dtype=np.int64))
+                       .astype(np.float32)[:, None])          # (D, 1)
+    return DepthMajorLayout(borders, onehot, jnp.transpose(sb), pow2, lv,
+                            n_outputs=ensemble.n_outputs,
+                            n_model_pads=ctx.n_pads)
+
+
+def _lower_depth_grouped(ensemble, ctx: _LowerCtx) -> DepthGroupedLayout:
+    if not is_concrete(ensemble):
+        raise ValueError(
+            "depth_grouped lowering reads split_bins to bucket trees by "
+            "true depth; the ensemble holds tracers (per-shard plans "
+            "inside shard_map must lower to 'soa')")
+    borders = ctx.pad_borders(ensemble.borders)
+    # Depth-0 trees (every level padded) still need one always-left
+    # level so the kernels see D >= 1; their single reachable leaf is
+    # index 0 either way.
+    depths = np.maximum(np.asarray(ensemble.true_depths), 1)
+    sf = np.asarray(ensemble.split_features)
+    sb = np.asarray(ensemble.split_bins)
+    lv = np.asarray(ensemble.leaf_values)
+    groups = []
+    for d in sorted(set(int(v) for v in depths)):
+        rows = np.flatnonzero(depths == d)
+        gsf = jnp.asarray(sf[rows][:, :d])
+        gsb = jnp.asarray(sb[rows][:, :d])
+        # trailing pad levels always go left, so only the first 2^d
+        # leaves are reachable — the shallow tree's actual table
+        glv = jnp.asarray(lv[rows][:, :1 << d])
+        gsf, gsb, glv = ctx.pad_trees(gsf, gsb, glv)
+        groups.append(DepthGroup(d, gsf, gsb, glv))
+    return DepthGroupedLayout(borders, tuple(groups),
+                              n_outputs=ensemble.n_outputs,
+                              n_model_pads=ctx.n_pads)

@@ -55,6 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import layout as layout_mod
+from repro.core.layout import LoweredEnsemble, STAGED_TREE_ALIGN
 from repro.core.quantize import (QuantizedPool, borders_fingerprint,
                                  MAX_BINS)
 from repro.core.trees import ObliviousEnsemble
@@ -67,10 +69,6 @@ Strategy = Literal["auto", "staged", "fused"]
 Backend = str   # "auto" or a kernel-registry backend family
 
 _STRATEGIES = ("auto", "staged", "fused")
-
-# T-axis alignment of the prepadded staged path (the leaf_index /
-# leaf_gather kernels' default tree block).
-STAGED_TREE_ALIGN = 16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,14 +84,22 @@ class PredictConfig:
                  interpret on CPU) | ref (pure jnp) — validated against
                  `kernels.registry.known_backends()`.  Note a third
                  registered family would pass validation but currently
-                 gets the ref (unpadded) model layout: `_prepare_model`
+                 gets the ref (unpadded) model layout: `layout.lower`
                  only knows how to pre-pad for the pallas kernels'
                  block contracts
+      layout     physical model layout the plan lowers to (see
+                 `repro.core.layout`): soa | depth_major |
+                 depth_grouped; auto picks from the ensemble's depth
+                 histogram / leaf-table bytes via
+                 `kernels.tuning.best_layout`
       tree_block staged-path tree blocking (CalcTreesBlockedImpl); 0 = off
+                 (soa layout only — an auto layout resolves to soa when
+                 tree blocking is requested)
       block_n/t  fused-kernel Pallas block shapes; None = autotuned
     """
     strategy: Strategy = "auto"
     backend: Backend = "auto"
+    layout: str = "auto"
     tree_block: int = 0
     block_n: Optional[int] = None
     block_t: Optional[int] = None
@@ -106,9 +112,18 @@ class PredictConfig:
         if self.backend not in backends:
             raise ValueError(f"backend must be one of {backends}, "
                              f"got {self.backend!r}")
+        layouts = ("auto",) + layout_mod.LAYOUT_NAMES
+        if self.layout not in layouts:
+            raise ValueError(f"layout must be one of {layouts}, "
+                             f"got {self.layout!r}")
         if not isinstance(self.tree_block, int) or self.tree_block < 0:
             raise ValueError(f"tree_block must be an int >= 0, "
                              f"got {self.tree_block!r}")
+        if self.tree_block and self.layout not in ("auto", "soa"):
+            raise ValueError(
+                f"tree_block is a soa-layout feature (the depth layouts "
+                f"block by structure instead); got tree_block="
+                f"{self.tree_block} with layout={self.layout!r}")
         for name in ("block_n", "block_t"):
             v = getattr(self, name)
             if v is not None and (not isinstance(v, int) or v < 1):
@@ -118,6 +133,7 @@ class PredictConfig:
     @property
     def is_resolved(self) -> bool:
         return (self.strategy != "auto" and self.backend != "auto"
+                and self.layout != "auto"
                 and (self.strategy != "fused"
                      or (self.block_n is not None
                          and self.block_t is not None)))
@@ -130,7 +146,10 @@ class PredictConfig:
         (`registry.default_backend()`, reading the once-per-process
         platform); fused block shapes come from the VMEM footprint
         model in `kernels.tuning`, sized to this ensemble (and
-        `n_rows`, the expected batch size, when known).
+        `n_rows`, the expected batch size, when known); the `auto`
+        layout comes from `tuning.best_layout` on the ensemble's depth
+        histogram (tracer ensembles — per-shard plans built inside
+        shard_map — pin to soa: grouping needs to read split_bins).
         """
         strategy, backend = self.strategy, self.backend
         if strategy == "auto":
@@ -138,6 +157,15 @@ class PredictConfig:
                 else "staged"
         if backend == "auto":
             backend = registry.default_backend()
+        layout = self.layout
+        if layout == "auto":
+            if self.tree_block or not layout_mod.is_concrete(ensemble):
+                layout = "soa"
+            else:
+                layout = tuning.best_layout(ensemble.true_depths,
+                                            ensemble.n_outputs,
+                                            ensemble.n_features,
+                                            backend=backend)
         block_n, block_t = self.block_n, self.block_t
         if strategy == "fused" and (block_n is None or block_t is None):
             tn, tt = tuning.best_fused_blocks(
@@ -148,25 +176,8 @@ class PredictConfig:
             block_n = block_n or tn
             block_t = block_t or tt
         return dataclasses.replace(self, strategy=strategy, backend=backend,
-                                   block_n=block_n, block_t=block_t)
-
-
-@dataclasses.dataclass(frozen=True)
-class _PreparedModel:
-    """Model arrays in plan layout.
-
-    For the pallas backend they are padded to block multiples (F to the
-    lane width with +inf borders, T to the tree block with no-op trees);
-    for ref they are the original arrays — ref kernels take any shape,
-    so padding would only add wasted math.
-    """
-    borders: jax.Array         # (B, Fp) f32
-    split_features: jax.Array  # (Tp, D) i32
-    split_bins: jax.Array      # (Tp, D) i32
-    leaf_values: jax.Array     # (Tp, L, C) f32
-    # staged tree blocking: per-block (sf, sb, lv) slices, pre-cut and
-    # pre-padded at build time so the per-call loop never touches jnp.pad
-    tree_blocks: Optional[tuple] = None
+                                   layout=layout, block_n=block_n,
+                                   block_t=block_t)
 
 
 def proba_from_raw(raw: jax.Array, n_outputs: int) -> jax.Array:
@@ -187,55 +198,21 @@ def classify_from_raw(raw: jax.Array, n_outputs: int) -> jax.Array:
     return jnp.argmax(raw, axis=-1).astype(jnp.int32)
 
 
-def _prepare_model(ensemble: ObliviousEnsemble,
-                   cfg: PredictConfig) -> tuple[_PreparedModel, int]:
-    """The one-time model-side padding `Predictor.build` hoists.
+def _lower_model(ensemble: ObliviousEnsemble, cfg: PredictConfig
+                 ) -> tuple[LoweredEnsemble, int, float]:
+    """The one-time model lowering `Predictor.build` hoists.
 
-    Returns the prepared arrays plus the number of model pad ops spent,
-    counted locally (the global `ops.pad_stats` counter may tick from
-    other threads concurrently).
+    Returns the lowered model, the number of model pad ops spent, and
+    the wall-clock lowering seconds (surfaced in `Predictor.stats` so
+    serving dashboards can see what one-time cost shipped).
     """
-    pallas = cfg.backend == "pallas"
+    import time
     t_align = cfg.block_t if cfg.strategy == "fused" else STAGED_TREE_ALIGN
-    n_pads = 0
-
-    def pad(a, axis, target, value=0):
-        nonlocal n_pads
-        out = ops._pad_dim(a, axis, target, value=value, kind="model")
-        if out is not a:
-            n_pads += 1
-        return out
-
-    def pad_tree_arrays(sf, sb, lv):
-        if not pallas:
-            return sf, sb, lv
-        tp = ops._round_up(max(sf.shape[0], 1), t_align)
-        return (pad(sf, 0, tp), pad(sb, 0, tp, value=PAD_SPLIT_BIN),
-                pad(lv, 0, tp))
-
-    borders = ensemble.borders
-    if pallas:
-        fp = ops._round_up(max(ensemble.n_features, 1), ops.FEATURE_ALIGN)
-        borders = pad(borders, 1, fp, value=np.float32(np.inf))
-
-    if (cfg.strategy == "staged" and cfg.tree_block
-            and ensemble.n_trees > cfg.tree_block):
-        blocks = []
-        for start in range(0, ensemble.n_trees, cfg.tree_block):
-            blk = ensemble.slice_trees(
-                start, min(start + cfg.tree_block, ensemble.n_trees))
-            blocks.append(pad_tree_arrays(blk.split_features,
-                                          blk.split_bins, blk.leaf_values))
-        # the blocked path never reads the whole-ensemble arrays, so keep
-        # the (unpadded) originals rather than holding a second padded
-        # copy of the full model
-        return _PreparedModel(borders, ensemble.split_features,
-                              ensemble.split_bins, ensemble.leaf_values,
-                              tuple(blocks)), n_pads
-
-    sf, sb, lv = pad_tree_arrays(ensemble.split_features,
-                                 ensemble.split_bins, ensemble.leaf_values)
-    return _PreparedModel(borders, sf, sb, lv, None), n_pads
+    tree_block = cfg.tree_block if cfg.strategy == "staged" else 0
+    t0 = time.perf_counter()
+    lowered = layout_mod.lower(ensemble, cfg.layout, backend=cfg.backend,
+                               t_align=t_align, tree_block=tree_block)
+    return lowered, lowered.n_model_pads, time.perf_counter() - t0
 
 
 class Predictor:
@@ -244,7 +221,9 @@ class Predictor:
     Construct with `Predictor.build(...)` (or `from_catboost_json`).
     The plan owns:
       * a fully resolved `PredictConfig` (no `auto` left)
-      * the model arrays, padded to block multiples exactly once
+      * the model lowered ONCE into its physical layout (see
+        `repro.core.layout`): arrays reordered / precomputed / padded
+        to block multiples at build time
       * jitted `raw` / `proba` / `classify` entry points whose compile
         cache is keyed by batch shape — with bucketed serving batches,
         compiles are bounded by (entries used x buckets)
@@ -253,17 +232,19 @@ class Predictor:
     """
 
     def __init__(self, ensemble: ObliviousEnsemble, config: PredictConfig,
-                 prepared: Optional[_PreparedModel], *,
+                 lowered: Optional[LoweredEnsemble], *,
                  on_trace: Optional[Callable[[], None]] = None,
-                 build_model_pads: int = 0):
+                 build_model_pads: int = 0,
+                 lower_time_s: float = 0.0):
         if not config.is_resolved:
             raise ValueError("Predictor requires a resolved PredictConfig; "
                              "use Predictor.build()")
         self.ensemble = ensemble
         self.config = config
-        self._prepared_model = prepared
+        self._lowered = lowered
         self._on_trace = on_trace
         self._build_model_pads = build_model_pads
+        self._lower_time_s = lower_time_s
         self._lock = threading.Lock()
         self._traces: dict[str, int] = {}
         self._entry_shapes: set[tuple] = set()
@@ -301,9 +282,9 @@ class Predictor:
         penalty (serving passes its largest bucket).  `config_kw` is a
         convenience for `Predictor.build(ens, strategy="fused")` style
         calls; it cannot be combined with an explicit `config`.
-        `prepare=False` defers the model-side padding to the first local
+        `prepare=False` defers the model lowering to the first local
         predict — for plans used only through `sharded(mesh)`, which
-        prepares per tree shard and would never read the local copy.
+        lowers per tree shard and would never read the local copy.
         """
         if config is None:
             config = PredictConfig(**config_kw)
@@ -311,10 +292,10 @@ class Predictor:
             raise TypeError("pass either a PredictConfig or config kwargs, "
                             f"not both: {sorted(config_kw)}")
         resolved = config.resolve(ensemble, n_rows=expected_batch)
-        prepared, pads = (_prepare_model(ensemble, resolved) if prepare
-                          else (None, 0))
-        return cls(ensemble, resolved, prepared, on_trace=on_trace,
-                   build_model_pads=pads)
+        lowered, pads, secs = (_lower_model(ensemble, resolved) if prepare
+                               else (None, 0, 0.0))
+        return cls(ensemble, resolved, lowered, on_trace=on_trace,
+                   build_model_pads=pads, lower_time_s=secs)
 
     @classmethod
     def from_catboost_json(cls, path: str | pathlib.Path,
@@ -324,6 +305,12 @@ class Predictor:
         return cls.build(load_catboost_json(path), config, **build_kw)
 
     # -- plan internals ----------------------------------------------------
+    @property
+    def lowered(self) -> LoweredEnsemble:
+        """The physical `LoweredEnsemble` this plan scores through
+        (lowering it first for deferred-prepare plans)."""
+        return self._ensure_prepared()
+
     @property
     def schema_fingerprint(self) -> str:
         """Fingerprint of this plan's quantization schema: pools are
@@ -350,58 +337,47 @@ class Predictor:
             return impl(x)
         return jax.jit(traced)
 
-    def _ensure_prepared(self) -> _PreparedModel:
-        """Model prep for a `prepare=False` plan, eagerly (never inside a
-        trace: the pads must run once, not once per compile)."""
-        p = self._prepared_model
+    def _ensure_prepared(self) -> LoweredEnsemble:
+        """Model lowering for a `prepare=False` plan, eagerly (never
+        inside a trace: lowering must run once, not once per compile)."""
+        p = self._lowered
         if p is None:
             with self._lock:
-                p = self._prepared_model
+                p = self._lowered
                 if p is None:
-                    p, pads = _prepare_model(self.ensemble, self.config)
-                    self._prepared_model = p
+                    p, pads, secs = _lower_model(self.ensemble, self.config)
+                    self._lowered = p
                     self._build_model_pads = pads
+                    self._lower_time_s = secs
         return p
 
     def _accumulate_trees(self, bins: jax.Array) -> jax.Array:
-        """Staged index+gather over prepadded tree arrays, from bins.
+        """Staged index+gather over the lowered model, from bins.
 
         Shared by the float path (after its binarize stage) and the
         quantized-pool path (which starts here — binarize never runs).
         `bins` may be int32 or uint8; the registry routes uint8 to the
-        u8 kernel variants.  A fused-strategy plan scoring a pool also
-        lands here: its trees are padded to cfg.block_t multiples, so
-        the staged kernels get that block shape.
+        u8 kernel variants.  The per-layout kernel routing lives on the
+        `LoweredEnsemble` itself (`leaf_sum`): soa runs the classic
+        index+gather (optionally tree-blocked), depth_major matmuls
+        against the precomputed one-hot, depth_grouped loops depth
+        groups.  A fused-strategy plan scoring a pool also lands here:
+        its trees are padded to cfg.block_t multiples, so the staged
+        kernels get that block shape.
         """
-        cfg, p = self.config, self._prepared_model
+        cfg = self.config
         block_t = (cfg.block_t if cfg.strategy == "fused"
                    else STAGED_TREE_ALIGN)
-        if p.tree_blocks is not None:
-            # CalcTreesBlockedImpl with the block slices cut at build time
-            acc = jnp.zeros((bins.shape[0], self.ensemble.n_outputs),
-                            jnp.float32)
-            for sf, sb, lv in p.tree_blocks:
-                idx = ops.leaf_index_prepadded(bins, sf, sb,
-                                               backend=cfg.backend,
-                                               block_t=block_t)
-                acc = acc + ops.leaf_gather_prepadded(idx, lv,
-                                                      backend=cfg.backend,
-                                                      block_t=block_t)
-            return acc
-        idx = ops.leaf_index_prepadded(bins, p.split_features, p.split_bins,
-                                       backend=cfg.backend, block_t=block_t)
-        return ops.leaf_gather_prepadded(idx, p.leaf_values,
-                                         backend=cfg.backend,
-                                         block_t=block_t)
+        return self._lowered.leaf_sum(bins, backend=cfg.backend,
+                                      block_t=block_t)
 
     def _raw_impl(self, x: jax.Array) -> jax.Array:
-        cfg, p = self.config, self._prepared_model
+        cfg, p = self.config, self._lowered
         base = self.ensemble.base_score[None, :]
         if cfg.strategy == "fused":
-            return base + ops.fused_predict_prepadded(
-                x, p.borders, p.split_features, p.split_bins, p.leaf_values,
-                backend=cfg.backend, block_n=cfg.block_n,
-                block_t=cfg.block_t)
+            return base + p.fused_raw(x, backend=cfg.backend,
+                                      block_n=cfg.block_n,
+                                      block_t=cfg.block_t)
         bins = ops.binarize_prepadded(x, p.borders, backend=cfg.backend)
         return base + self._accumulate_trees(bins)
 
@@ -415,8 +391,8 @@ class Predictor:
     # -- quantized-pool path (binarize skipped entirely) -------------------
     def _pool_raw_impl(self, bins: jax.Array) -> jax.Array:
         # Pool bins carry the unpadded feature axis (shareable across
-        # plans); pad data-side up to the prepadded borders' aligned F.
-        p = self._prepared_model
+        # plans); pad data-side up to the lowered borders' aligned F.
+        p = self._lowered
         bins = ops.pad_features(bins, p.borders.shape[1])
         base = self.ensemble.base_score[None, :]
         return base + self._accumulate_trees(bins)
@@ -430,10 +406,10 @@ class Predictor:
                                  self.ensemble.n_outputs)
 
     def _quantize_impl(self, x: jax.Array) -> jax.Array:
-        # Binarize against the *prepadded* borders (zero model-side pads
+        # Binarize against the *lowered* borders (zero model-side pads
         # at trace time), then drop the alignment columns so the pool is
         # schema-wide shareable, not plan-layout specific.
-        p = self._prepared_model
+        p = self._lowered
         bins = ops.binarize_u8_prepadded(x, p.borders,
                                          backend=self.config.backend)
         return bins[:, :self.ensemble.n_features]
@@ -449,7 +425,7 @@ class Predictor:
                 "only shareable across models with identical borders).")
 
     def _call(self, name: str, x) -> jax.Array:
-        if self._prepared_model is None:
+        if self._lowered is None:
             self._ensure_prepared()
         if isinstance(x, QuantizedPool):
             self._check_pool(x)
@@ -525,6 +501,11 @@ class Predictor:
         ens, cfg = self.ensemble, self.config
         if strategy is not None and strategy != cfg.strategy:
             cfg = dataclasses.replace(cfg, strategy=strategy)
+        if cfg.layout != "soa":
+            # per-shard plans lower inside shard_map, where the shard's
+            # split_bins are tracers — the structure-reading layouts
+            # cannot lower there, so shard-local plans stay on soa
+            cfg = dataclasses.replace(cfg, layout="soa")
         dp, tree_p = P(tuple(data_axes)), P(model_axis)
 
         def _local(sf, sb, lv, borders, xs):
@@ -552,29 +533,37 @@ class Predictor:
     @property
     def stats(self) -> dict[str, Any]:
         """Plan-cache telemetry: XLA traces per entry point, distinct
-        (entry, batch shape) cache keys seen, and how many model-side
-        pad ops the one-time build spent."""
+        (entry, batch shape) cache keys seen, the physical layout the
+        plan lowered to plus the one-time lowering cost (pad ops and
+        wall-clock seconds) — what serving dashboards need to see what
+        shipped."""
         with self._lock:
             return {
                 "traces": dict(self._traces),
                 "total_traces": sum(self._traces.values()),
                 "cache_entries": len(self._entry_shapes),
                 "entry_shapes": sorted(self._entry_shapes),
+                "layout": self.config.layout,
+                "lower_time_s": self._lower_time_s,
                 "build_model_pads": self._build_model_pads,
             }
 
     def describe(self) -> dict[str, Any]:
-        return {**self.ensemble.describe(),
-                "strategy": self.config.strategy,
-                "backend": self.config.backend,
-                "tree_block": self.config.tree_block,
-                "block_n": self.config.block_n,
-                "block_t": self.config.block_t,
-                "schema_fingerprint": self.schema_fingerprint}
+        out = {**self.ensemble.describe(),
+               "strategy": self.config.strategy,
+               "backend": self.config.backend,
+               "layout": self.config.layout,
+               "tree_block": self.config.tree_block,
+               "block_n": self.config.block_n,
+               "block_t": self.config.block_t,
+               "schema_fingerprint": self.schema_fingerprint}
+        if self._lowered is not None:
+            out["lowered"] = self._lowered.describe()
+        return out
 
     def __repr__(self) -> str:
         c = self.config
-        return (f"<Predictor {c.strategy}/{c.backend} "
+        return (f"<Predictor {c.strategy}/{c.backend}/{c.layout} "
                 f"trees={self.ensemble.n_trees} "
                 f"depth={self.ensemble.depth} C={self.ensemble.n_outputs}>")
 

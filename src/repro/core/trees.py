@@ -27,7 +27,6 @@ import numpy as np
 from repro.kernels.ops import PAD_SPLIT_BIN  # noqa: F401
 
 
-@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ObliviousEnsemble:
     split_features: jax.Array    # (T, D) int32
@@ -38,6 +37,11 @@ class ObliviousEnsemble:
     base_score: jax.Array = None  # (C,) float32 additive offset
 
     def __post_init__(self):
+        # Default the base score to zeros at *construction* time only.
+        # The pytree unflatten below bypasses __init__, so tree_map /
+        # tree_unflatten never re-enter this default path — a mapped-to-
+        # None leaf stays None instead of crashing on
+        # `None.shape` (regression: tests/test_gbdt.py pytree round-trip).
         if self.base_score is None:
             object.__setattr__(
                 self, "base_score",
@@ -50,6 +54,32 @@ class ObliviousEnsemble:
     @property
     def depth(self) -> int:
         return self.split_features.shape[1]
+
+    @property
+    def true_depths(self) -> np.ndarray:
+        """(T,) int32 — each tree's depth before depth padding.
+
+        A tree shallower than the shared ensemble depth carries trailing
+        always-left levels (`split_bins == PAD_SPLIT_BIN`); its true
+        depth is the level count with those trailing pads stripped (a
+        PAD level *between* real levels still counts — only the trailing
+        run is padding, matching the importer's convention).  Model
+        structure, so concrete arrays only: reading it on traced arrays
+        raises (use `layout.is_concrete` to guard).
+        """
+        sb = np.asarray(self.split_bins)
+        if sb.shape[0] == 0:
+            return np.zeros((0,), np.int32)
+        trailing_pad = np.cumprod(
+            (sb == PAD_SPLIT_BIN)[:, ::-1], axis=1).sum(axis=1)
+        return (sb.shape[1] - trailing_pad).astype(np.int32)
+
+    def lower(self, layout: str = "soa", **lower_kw):
+        """Lower the logical model into a physical `LoweredEnsemble`
+        layout (see `repro.core.layout`): "soa", "depth_major" or
+        "depth_grouped"."""
+        from repro.core import layout as layout_mod
+        return layout_mod.lower(self, layout, **lower_kw)
 
     @property
     def n_outputs(self) -> int:
@@ -101,6 +131,40 @@ class ObliviousEnsemble:
         return json.dumps(self.describe())
 
 
+# Pytree registration.  Not `jax.tree_util.register_dataclass`: its
+# unflatten calls the constructor, which would re-run __post_init__'s
+# base_score default on every tree_unflatten — with non-array leaves
+# (tree_map to None, tree_transpose, structural unflattens) that path
+# dereferences `leaf_values.shape` on whatever leaf happens to be there.
+# Unflattening here rebuilds the instance field-by-field without
+# __init__, so lowering/mapping an ensemble is a pure structural
+# operation and the zeros default exists only on user construction.
+_ENSEMBLE_FIELDS = ("split_features", "split_bins", "leaf_values",
+                    "borders", "n_borders", "base_score")
+
+
+def _ensemble_flatten_with_keys(e: "ObliviousEnsemble"):
+    children = tuple((jax.tree_util.GetAttrKey(f), getattr(e, f))
+                     for f in _ENSEMBLE_FIELDS)
+    return children, None
+
+
+def _ensemble_flatten(e: "ObliviousEnsemble"):
+    return tuple(getattr(e, f) for f in _ENSEMBLE_FIELDS), None
+
+
+def _ensemble_unflatten(_aux, children) -> "ObliviousEnsemble":
+    obj = object.__new__(ObliviousEnsemble)
+    for f, c in zip(_ENSEMBLE_FIELDS, children):
+        object.__setattr__(obj, f, c)
+    return obj
+
+
+jax.tree_util.register_pytree_with_keys(
+    ObliviousEnsemble, _ensemble_flatten_with_keys, _ensemble_unflatten,
+    _ensemble_flatten)
+
+
 def empty_ensemble(n_features: int, depth: int, n_outputs: int,
                    borders: jax.Array, n_borders: jax.Array
                    ) -> ObliviousEnsemble:
@@ -111,6 +175,34 @@ def empty_ensemble(n_features: int, depth: int, n_outputs: int,
         borders=borders,
         n_borders=n_borders,
     )
+
+
+def truncate_tree_depths(ensemble: ObliviousEnsemble,
+                         depths) -> ObliviousEnsemble:
+    """Truncate tree t to `depths[t]` levels via trailing always-left
+    pads — the CatBoost shallow-tree convention (`split_bins` =
+    `PAD_SPLIT_BIN` beyond the true depth, unreachable leaf values
+    zeroed).  The canonical builder of mixed-depth ensembles: the
+    layout tests and the layout-sweep benchmark both construct their
+    covertype-style mixed-depth models through this, so the convention
+    lives in exactly one place.  `depths[t]` may be 0 (a constant tree:
+    only leaf 0 reachable) up to `ensemble.depth` (unchanged).
+    """
+    depths = np.asarray(depths, np.int64)
+    if depths.shape != (ensemble.n_trees,):
+        raise ValueError(f"need one depth per tree: got shape "
+                         f"{depths.shape} for {ensemble.n_trees} trees")
+    if depths.size and not (0 <= depths.min()
+                            and depths.max() <= ensemble.depth):
+        raise ValueError(f"depths must lie in [0, {ensemble.depth}], "
+                         f"got [{depths.min()}, {depths.max()}]")
+    sb = np.asarray(ensemble.split_bins).copy()
+    lv = np.asarray(ensemble.leaf_values).copy()
+    for t, d in enumerate(depths):
+        sb[t, d:] = PAD_SPLIT_BIN
+        lv[t, 1 << d:] = 0.0
+    return dataclasses.replace(ensemble, split_bins=jnp.asarray(sb),
+                               leaf_values=jnp.asarray(lv))
 
 
 def concat_ensembles(a: ObliviousEnsemble, b: ObliviousEnsemble

@@ -122,3 +122,102 @@ def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
         scratch_shapes=[pltpu.VMEM((block_n, F), bins_scratch_dtype)],
         interpret=interpret,
     )(x, borders, split_features, split_bins, leaf_values)
+
+
+def _fused_dm_kernel(x_ref, borders_ref, onehot_ref, sb_ref, pow2_ref,
+                     lv_ref, out_ref, bins_scratch, *, n_borders: int):
+    t_blk = pl.program_id(1)
+
+    # ---- Stage 1: binarize (identical to the soa kernel) ----
+    @pl.when(t_blk == 0)
+    def _binarize():
+        x = x_ref[...]                               # (bn, F)
+        borders = borders_ref[...]                   # (B, F)
+
+        def body(b, acc):
+            row = jax.lax.dynamic_index_in_dim(borders, b, axis=0,
+                                               keepdims=True)
+            return acc + (x > row).astype(jnp.int32)
+
+        bins_scratch[...] = jax.lax.fori_loop(
+            0, n_borders, body,
+            jnp.zeros(x.shape, jnp.int32)).astype(bins_scratch.dtype)
+
+    bins = bins_scratch[...].astype(jnp.float32)     # (bn, F)
+    onehot = onehot_ref[...]                         # (bt, D, F) f32
+    sb = sb_ref[...]                                 # (D, bt) int32
+    pow2 = pow2_ref[...]                             # (D, 1) f32
+    lv = lv_ref[...]                                 # (bt, L, C)
+    bt, D, F = onehot.shape
+    bn = bins.shape[0]
+    _, L, C = lv.shape
+
+    # ---- Stage 2: leaf index via the PRECOMPUTED one-hot ----
+    # The soa kernel rebuilds iota + one-hot from split_features every
+    # call; the depth-major layout hoists that to lower time, so stage 2
+    # is a single MXU matmul against the lowered gather matrix.
+    gathered = jax.lax.dot(onehot.reshape(bt * D, F), bins.T,
+                           preferred_element_type=jnp.float32)
+    gathered = gathered.reshape(bt, D, bn)
+    go_right = gathered >= sb.T[:, :, None].astype(jnp.float32)
+    idx = jnp.sum(go_right.astype(jnp.float32)
+                  * pow2.reshape(1, D, 1), axis=1)               # (bt, bn)
+    idx = idx.T.astype(jnp.int32)                                # (bn, bt)
+
+    # ---- Stage 3: leaf accumulate (identical to the soa kernel) ----
+    leaf_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, bt, L), 2)
+    onehot_l = (leaf_iota == idx[:, :, None]).astype(jnp.float32)
+    acc = jax.lax.dot(onehot_l.reshape(bn, bt * L), lv.reshape(bt * L, C),
+                      preferred_element_type=jnp.float32)        # (bn, C)
+
+    @pl.when(t_blk == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(t_blk != 0)
+    def _accum():
+        out_ref[...] += acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_t", "interpret",
+                                    "bins_scratch_dtype"))
+def fused_predict_dm(x: jax.Array, borders: jax.Array, onehot: jax.Array,
+                     split_bins_dm: jax.Array, pow2: jax.Array,
+                     leaf_values: jax.Array, *,
+                     block_n: int = 128, block_t: int = 16,
+                     interpret: bool = False,
+                     bins_scratch_dtype=jnp.int32) -> jax.Array:
+    """Fused GBDT predict over the depth-major lowered layout -> (N, C).
+
+    Same contract as `fused_predict` with the model side replaced by
+    the `DepthMajorLayout` arrays: `onehot` (T, D, F) f32 precomputed
+    one-hot(sf), `split_bins_dm` (D, T) int32 bit planes, `pow2`
+    (D, 1) f32.  N and T must be pre-padded to the block multiples.
+    """
+    N, F = x.shape
+    B = borders.shape[0]
+    T, D, _ = onehot.shape
+    _, L, C = leaf_values.shape
+    if N % block_n or T % block_t:
+        raise ValueError(
+            f"fused_predict_dm requires padded inputs: N={N} % block_n="
+            f"{block_n} and T={T} % block_t={block_t} must be 0 "
+            "(lowering pads the model; use the plan API)")
+    grid = (N // block_n, T // block_t)
+    return pl.pallas_call(
+        functools.partial(_fused_dm_kernel, n_borders=B),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, F), lambda i, j: (i, 0)),
+            pl.BlockSpec((B, F), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_t, D, F), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((D, block_t), lambda i, j: (0, j)),
+            pl.BlockSpec((D, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_t, L, C), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, C), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, C), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_n, F), bins_scratch_dtype)],
+        interpret=interpret,
+    )(x, borders, onehot, split_bins_dm, pow2, leaf_values)

@@ -75,6 +75,65 @@ def leaf_index(bins: jax.Array, split_features: jax.Array,
     )(bins, split_features, split_bins)
 
 
+def _leaf_index_dm_kernel(bins_ref, onehot_ref, sb_ref, pow2_ref, out_ref):
+    # Depth-major lowered layout: the one-hot feature-gather matrix and
+    # the pow2 vector arrive precomputed (hoisted to lower time), so the
+    # kernel body is the two MXU/VPU passes and nothing else — no iota,
+    # no one-hot construction, no per-call shift building.
+    bins = bins_ref[...].astype(jnp.float32)          # (bn, F)
+    onehot = onehot_ref[...]                          # (bt, D, F) f32
+    sb = sb_ref[...]                                  # (D, bt) int32
+    pow2 = pow2_ref[...]                              # (D, 1) f32
+    bt, D, F = onehot.shape
+    bn = bins.shape[0]
+
+    gathered = jax.lax.dot(onehot.reshape(bt * D, F), bins.T,
+                           preferred_element_type=jnp.float32)  # (bt*D, bn)
+    gathered = gathered.reshape(bt, D, bn)
+    go_right = gathered >= sb.T[:, :, None].astype(jnp.float32)  # (bt, D, bn)
+    idx = jnp.sum(go_right.astype(jnp.float32)
+                  * pow2.reshape(1, D, 1), axis=1)               # (bt, bn)
+    out_ref[...] = idx.T.astype(jnp.int32)                       # (bn, bt)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_t",
+                                             "interpret"))
+def leaf_index_dm(bins: jax.Array, onehot: jax.Array, split_bins_dm: jax.Array,
+                  pow2: jax.Array, *, block_n: int = 256, block_t: int = 16,
+                  interpret: bool = False) -> jax.Array:
+    """Depth-major `leaf_index`: gather via the precomputed one-hot
+    matrix -> (N, T) int32.
+
+    Inputs are the depth-major lowered model arrays (see
+    `repro.core.layout.DepthMajorLayout`): `onehot` (T, D, F) f32,
+    `split_bins_dm` (D, T) int32 bit-plane order, `pow2` (D, 1) f32.
+    Pre-padded: N % block_n == 0, T % block_t == 0, padded trees carry
+    split_bins > max bin.  `bins` may be int32 or uint8 (the
+    quantized-pool stream) — both upcast exactly to f32.
+    """
+    N, F = bins.shape
+    T, D, _ = onehot.shape
+    if N % block_n or T % block_t:
+        raise ValueError(
+            f"leaf_index_dm requires padded inputs: N={N} % block_n="
+            f"{block_n} and T={T} % block_t={block_t} must be 0 "
+            "(lowering pads the model; use the plan API)")
+    grid = (N // block_n, T // block_t)
+    return pl.pallas_call(
+        _leaf_index_dm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, F), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, D, F), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((D, block_t), lambda i, j: (0, j)),
+            pl.BlockSpec((D, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, T), jnp.int32),
+        interpret=interpret,
+    )(bins, onehot, split_bins_dm, pow2)
+
+
 def leaf_index_u8(bins: jax.Array, split_features: jax.Array,
                   split_bins: jax.Array, *, block_n: int = 256,
                   block_t: int = 16, interpret: bool = False) -> jax.Array:

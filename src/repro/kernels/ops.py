@@ -113,10 +113,19 @@ def _require_u8_borders(borders: jax.Array) -> None:
             "max_bins cap)")
 
 
+# Layout capability shorthands (see repro.core.layout): ops that read
+# no tree-structure arrays work under every physical layout; soa tree
+# kernels also serve depth_grouped, which evaluates group-by-group
+# through them.
+ALL_LAYOUTS = ("soa", "depth_major", "depth_grouped")
+SOA_LAYOUTS = ("soa", "depth_grouped")
+
+
 # --------------------------------------------------------------------------
 # Registered implementations: binarize
 # --------------------------------------------------------------------------
 @registry.register("binarize", "ref", dtypes=("int32",),
+                   layouts=ALL_LAYOUTS,
                    constraints="any shape; pure-jnp oracle")
 def _binarize_ref(x, borders, *, prepadded=False, **_blocks):
     if prepadded:
@@ -125,6 +134,7 @@ def _binarize_ref(x, borders, *, prepadded=False, **_blocks):
 
 
 @registry.register("binarize", "ref_u8", dtypes=("uint8",),
+                   layouts=ALL_LAYOUTS,
                    constraints="<= 255 borders; uint8 bins out")
 def _binarize_ref_u8(x, borders, *, prepadded=False, **_blocks):
     if prepadded:
@@ -158,6 +168,7 @@ def _binarize_pallas_impl(x, borders, *, block_n, block_f, prepadded,
 
 
 @registry.register("binarize", "pallas", dtypes=("int32",),
+                   layouts=ALL_LAYOUTS,
                    constraints="pads N/F to block multiples")
 def _binarize_pallas(x, borders, *, block_n=256, block_f=128,
                      prepadded=False):
@@ -167,6 +178,7 @@ def _binarize_pallas(x, borders, *, block_n=256, block_f=128,
 
 
 @registry.register("binarize", "pallas_u8", dtypes=("uint8",),
+                   layouts=ALL_LAYOUTS,
                    constraints="<= 255 borders; u8 stores tile (32, 128) "
                                "on real TPUs")
 def _binarize_pallas_u8(x, borders, *, block_n=256, block_f=128,
@@ -181,6 +193,7 @@ def _binarize_pallas_u8(x, borders, *, block_n=256, block_f=128,
 # Registered implementations: leaf_index
 # --------------------------------------------------------------------------
 @registry.register("leaf_index", "ref", dtypes=("int32", "uint8"),
+                   layouts=SOA_LAYOUTS,
                    constraints="any shape; bins int32 or uint8")
 def _leaf_index_ref(bins, sf, sb, *, prepadded=False, **_blocks):
     return _ref.leaf_index(bins, sf, sb)
@@ -208,6 +221,7 @@ def _leaf_index_pallas_impl(kernel, bins, sf, sb, *, block_n, block_t,
 
 
 @registry.register("leaf_index", "pallas", dtypes=("int32",),
+                   layouts=SOA_LAYOUTS,
                    constraints="pads N/T to block multiples")
 def _leaf_index_pallas(bins, sf, sb, *, block_n=256, block_t=16,
                        prepadded=False):
@@ -217,6 +231,7 @@ def _leaf_index_pallas(bins, sf, sb, *, block_n=256, block_t=16,
 
 
 @registry.register("leaf_index", "pallas_u8", dtypes=("uint8",),
+                   layouts=SOA_LAYOUTS,
                    constraints="uint8 bins (quantized pool); u8 loads tile "
                                "(32, 128) on real TPUs")
 def _leaf_index_pallas_u8(bins, sf, sb, *, block_n=256, block_t=16,
@@ -226,16 +241,45 @@ def _leaf_index_pallas_u8(bins, sf, sb, *, block_n=256, block_t=16,
                                    prepadded=prepadded)
 
 
+# Depth-major layout variants: consume the lowered (onehot, sb_dm, pow2)
+# arrays instead of (split_features, split_bins).  The model side is
+# always produced pre-padded by `layout.lower`, so only the data side
+# is padded here.
+@registry.register("leaf_index", "ref_dm", dtypes=("int32", "uint8"),
+                   layouts=("depth_major",),
+                   constraints="depth-major lowered model; any shape")
+def _leaf_index_ref_dm(bins, onehot, sb_dm, pow2, *, prepadded=False,
+                       **_blocks):
+    return _ref.leaf_index_depth_major(bins, onehot, sb_dm, pow2)
+
+
+@registry.register("leaf_index", "pallas_dm", dtypes=("int32", "uint8"),
+                   layouts=("depth_major",),
+                   constraints="depth-major lowered model (T/F pre-padded "
+                               "at lower time); pads N per call")
+def _leaf_index_pallas_dm(bins, onehot, sb_dm, pow2, *, block_n=256,
+                          block_t=16, prepadded=False):
+    N = bins.shape[0]
+    Np = _round_up(max(N, 1), block_n)
+    binsp = _pad_dim(bins, 0, Np)
+    out = _index_k.leaf_index_dm(binsp, onehot, sb_dm, pow2,
+                                 block_n=block_n, block_t=block_t,
+                                 interpret=_interpret())
+    return out[:N]
+
+
 # --------------------------------------------------------------------------
 # Registered implementations: leaf_gather
 # --------------------------------------------------------------------------
 @registry.register("leaf_gather", "ref", dtypes=("int32",),
+                   layouts=ALL_LAYOUTS,
                    constraints="any shape; pure-jnp oracle")
 def _leaf_gather_ref(idx, leaf_values, *, prepadded=False, **_blocks):
     return _ref.leaf_gather(idx, leaf_values)
 
 
 @registry.register("leaf_gather", "pallas", dtypes=("int32",),
+                   layouts=ALL_LAYOUTS,
                    constraints="pads N/T to block multiples")
 def _leaf_gather_pallas(idx, leaf_values, *, block_n=128, block_t=16,
                         prepadded=False):
@@ -259,12 +303,14 @@ def _leaf_gather_pallas(idx, leaf_values, *, block_n=128, block_t=16,
 # Registered implementations: l2sq (rank-dispatched rowwise / matrix)
 # --------------------------------------------------------------------------
 @registry.register("l2sq", "ref", dtypes=("float32",),
+                   layouts=ALL_LAYOUTS,
                    constraints="rowwise (K,)x(N,K) or matrix (M,K)x(N,K)")
 def _l2sq_ref(a, b, **_blocks):
     return _ref.l2sq_rowwise(a, b) if a.ndim == 1 else _ref.l2sq_matrix(a, b)
 
 
 @registry.register("l2sq", "pallas", dtypes=("float32",),
+                   layouts=ALL_LAYOUTS,
                    constraints="rowwise (K,)x(N,K) or matrix (M,K)x(N,K); "
                                "pads to block multiples")
 def _l2sq_pallas(a, b, *, block_m=128, block_n=128, block_k=128):
@@ -291,6 +337,7 @@ def _l2sq_pallas(a, b, *, block_m=128, block_n=128, block_k=128):
 # Registered implementations: fused_predict
 # --------------------------------------------------------------------------
 @registry.register("fused_predict", "ref", dtypes=("int32",),
+                   layouts=SOA_LAYOUTS,
                    constraints="any shape; pure-jnp oracle")
 def _fused_ref(x, borders, sf, sb, lv, *, prepadded=False, **_blocks):
     if prepadded:
@@ -299,6 +346,7 @@ def _fused_ref(x, borders, sf, sb, lv, *, prepadded=False, **_blocks):
 
 
 @registry.register("fused_predict", "pallas", dtypes=("int32", "uint8"),
+                   layouts=SOA_LAYOUTS,
                    constraints="pads N/T/F to block multiples; u8 bins "
                                "scratch when <= 255 borders")
 def _fused_pallas(x, borders, sf, sb, lv, *, block_n=None, block_t=None,
@@ -336,6 +384,49 @@ def _fused_pallas(x, borders, sf, sb, lv, *, block_n=None, block_t=None,
     out = _fused_k.fused_predict(xp, bp, sfp, sbp, lvp, block_n=block_n,
                                  block_t=block_t, interpret=_interpret(),
                                  bins_scratch_dtype=scratch)
+    return out[:N]
+
+
+@registry.register("fused_predict", "ref_dm", dtypes=("int32",),
+                   layouts=("depth_major",),
+                   constraints="depth-major lowered model; any shape")
+def _fused_ref_dm(x, borders, onehot, sb_dm, pow2, lv, *, prepadded=False,
+                  **_blocks):
+    if prepadded:
+        x = _pad_dim(x, 1, borders.shape[1])
+    return _ref.fused_predict_depth_major(x, borders, onehot, sb_dm,
+                                          pow2, lv)
+
+
+@registry.register("fused_predict", "pallas_dm", dtypes=("int32", "uint8"),
+                   layouts=("depth_major",),
+                   constraints="depth-major lowered model (T/F pre-padded "
+                               "at lower time); pads N per call; u8 bins "
+                               "scratch when <= 255 borders")
+def _fused_pallas_dm(x, borders, onehot, sb_dm, pow2, lv, *,
+                     block_n=None, block_t=None, prepadded=False):
+    scratch = (jnp.uint8 if borders.shape[0] <= MAX_U8_BORDERS
+               else jnp.int32)
+    if block_n is None or block_t is None:
+        # same autotune fallback as the soa impl (plans always pass
+        # concrete blocks; direct registry dispatch may not) — except
+        # the model side is already lowered here, so block_t must
+        # divide the pre-padded T rather than drive its padding
+        T, D, F = onehot.shape
+        _, L, C = lv.shape
+        tn, tt = _tuning.best_fused_blocks(
+            F, D, L, C, borders.shape[0], n_rows=x.shape[0], n_trees=T)
+        block_n = block_n or tn
+        if block_t is None:
+            block_t = next(bt for bt in (tt, 64, 32, 16, 8, 4, 2, 1)
+                           if T % bt == 0)
+    N = x.shape[0]
+    Np = _round_up(max(N, 1), block_n)
+    xp = _pad_dim(_pad_dim(x, 0, Np), 1, borders.shape[1])
+    out = _fused_k.fused_predict_dm(xp, borders, onehot, sb_dm, pow2, lv,
+                                    block_n=block_n, block_t=block_t,
+                                    interpret=_interpret(),
+                                    bins_scratch_dtype=scratch)
     return out[:N]
 
 
@@ -487,5 +578,41 @@ def leaf_gather_prepadded(idx: jax.Array, leaf_values: jax.Array, *,
                           block_t: int = 16) -> jax.Array:
     """Sum prepadded leaf values at idx -> (N, C) f32."""
     return registry.dispatch("leaf_gather", backend, idx, leaf_values,
+                             block_n=block_n, block_t=block_t,
+                             prepadded=True)
+
+
+# --------------------------------------------------------------------------
+# Depth-major layout entry points (lowered-model hot loop)
+# --------------------------------------------------------------------------
+# These take the `DepthMajorLayout` arrays `layout.lower` produced —
+# the one-hot gather matrix, bit-plane split bins and the hoisted pow2
+# vector — so the kernels never rebuild iota/one-hot per call.  The
+# model side is always lowered pre-padded; data is padded per call.
+
+def leaf_index_dm_prepadded(bins: jax.Array, onehot: jax.Array,
+                            split_bins_dm: jax.Array, pow2: jax.Array, *,
+                            backend: Backend = "auto", block_n: int = 256,
+                            block_t: int = 16) -> jax.Array:
+    """Leaf indices from a depth-major lowered model -> (N, Tp) int32.
+    Accepts int32 or uint8 bins (quantized-pool scoring)."""
+    return registry.dispatch("leaf_index", backend, bins, onehot,
+                             split_bins_dm, pow2,
+                             dtype=_bins_dtype(bins),
+                             layout="depth_major",
+                             block_n=block_n, block_t=block_t,
+                             prepadded=True)
+
+
+def fused_predict_dm_prepadded(x: jax.Array, borders: jax.Array,
+                               onehot: jax.Array, split_bins_dm: jax.Array,
+                               pow2: jax.Array, leaf_values: jax.Array, *,
+                               backend: Backend = "auto",
+                               block_n: int = 128,
+                               block_t: int = 16) -> jax.Array:
+    """Fused predict on a depth-major lowered model -> (N, C) f32."""
+    return registry.dispatch("fused_predict", backend, x, borders, onehot,
+                             split_bins_dm, pow2, leaf_values,
+                             layout="depth_major",
                              block_n=block_n, block_t=block_t,
                              prepadded=True)

@@ -54,6 +54,30 @@ def leaf_index(bins: jax.Array, split_features: jax.Array,
     return jnp.sum(go_right * pow2, axis=-1, dtype=jnp.int32)
 
 
+def leaf_index_depth_major(bins: jax.Array, onehot: jax.Array,
+                           split_bins_dm: jax.Array,
+                           pow2: jax.Array) -> jax.Array:
+    """`leaf_index` over the depth-major lowered layout -> (N, T) int32.
+
+    Consumes what `layout.lower(..., "depth_major")` precomputes: the
+    one-hot feature-gather matrix `onehot` (T, D, F) f32 (row (t, d) is
+    onehot(sf[t, d])), split bins transposed to bit-plane order
+    `split_bins_dm` (D, T) int32, and the hoisted per-depth power-of-two
+    vector `pow2` (D, 1) f32.  The feature gather is a straight matmul
+    against the precomputed one-hot — no iota / one-hot rebuild per call
+    (the paper's pow2 hoisting applied to model structure).  Exact: bin
+    ids <= 255 and a one-hot matmul touch only f32-exact integers.
+    """
+    T, D, F = onehot.shape
+    N = bins.shape[0]
+    binsf = bins.astype(jnp.float32)
+    gathered = jnp.einsum("tdf,nf->ntd", onehot, binsf)        # (N, T, D)
+    go_right = gathered >= split_bins_dm.T[None, :, :].astype(jnp.float32)
+    return jnp.sum(go_right.astype(jnp.float32)
+                   * pow2[:, 0][None, None, :],
+                   axis=-1).astype(jnp.int32)
+
+
 def leaf_gather(idx: jax.Array, leaf_values: jax.Array) -> jax.Array:
     """pred[n, c] = sum_t leaf_values[t, idx[n, t], c]  -> (N, C) float32."""
     N, T = idx.shape
@@ -85,4 +109,14 @@ def fused_predict(x: jax.Array, borders: jax.Array, split_features: jax.Array,
     """binarize -> leaf_index -> leaf_gather in one logical op  -> (N, C)."""
     bins = binarize(x, borders)
     idx = leaf_index(bins, split_features, split_bins)
+    return leaf_gather(idx, leaf_values)
+
+
+def fused_predict_depth_major(x: jax.Array, borders: jax.Array,
+                              onehot: jax.Array, split_bins_dm: jax.Array,
+                              pow2: jax.Array,
+                              leaf_values: jax.Array) -> jax.Array:
+    """`fused_predict` over the depth-major lowered layout -> (N, C)."""
+    bins = binarize(x, borders)
+    idx = leaf_index_depth_major(bins, onehot, split_bins_dm, pow2)
     return leaf_gather(idx, leaf_values)

@@ -50,6 +50,7 @@ class KernelImpl:
     family: str                        # legacy backend family: ref | pallas
     dtypes: tuple[str, ...]            # bin-stream dtypes it handles
     platforms: tuple[str, ...]         # production-fit platforms
+    layouts: tuple[str, ...]           # physical model layouts it consumes
     constraints: str                   # human-readable constraint note
 
 
@@ -68,8 +69,17 @@ def _platform() -> str:
 def register(op: str, name: str, *, family: Optional[str] = None,
              dtypes: tuple[str, ...] = ("int32",),
              platforms: tuple[str, ...] = ("cpu", "tpu"),
+             layouts: tuple[str, ...] = ("soa",),
              constraints: str = "") -> Callable:
     """Decorator: register `fn` as implementation `name` of `op`.
+
+    `layouts` names the physical model layouts (see `repro.core.layout`)
+    whose arrays the implementation consumes: "soa" kernels take the
+    (T, D) split arrays, "depth_major" kernels take the lowered
+    (T, D, F) one-hot / (D, T) bit-plane arrays.  The "depth_grouped"
+    layout evaluates group-by-group through soa kernels, so soa impls
+    typically claim it too.  Ops whose inputs carry no model structure
+    (binarize, l2sq) are layout-independent and claim every layout.
 
     Returns the function unchanged, so module-level names keep working.
     Registering the same (op, name) twice is an error — it would
@@ -84,7 +94,7 @@ def register(op: str, name: str, *, family: Optional[str] = None,
             family=family or ("pallas" if name.startswith("pallas")
                               else "ref"),
             dtypes=tuple(dtypes), platforms=tuple(platforms),
-            constraints=constraints)
+            layouts=tuple(layouts), constraints=constraints)
         return fn
     return deco
 
@@ -131,14 +141,24 @@ def known_backends() -> tuple[str, ...]:
     return tuple(sorted(names or ()))
 
 
+# Layout -> implementation-name suffix tried when the backend's base
+# implementation does not consume that layout's arrays.
+_LAYOUT_SUFFIX = {"depth_major": "dm"}
+
+
 def resolve(op: str, backend: str = "auto", *,
-            dtype: Optional[str] = None) -> str:
+            dtype: Optional[str] = None,
+            layout: Optional[str] = None) -> str:
     """Map a legacy `backend=` value (or an exact impl name) to the
     implementation name to run.
 
-    `auto` resolves via `default_backend()`.  When `dtype` is given and
-    the resolved implementation does not handle it, the dtype-suffixed
-    sibling (`<name>_u8` for uint8) is tried before raising.
+    `auto` resolves via `default_backend()`.  When `layout` is given
+    and the resolved implementation does not consume that layout's
+    arrays, the layout-suffixed sibling (`<name>_dm` for depth_major)
+    is tried first — layout determines the *signature*, so it routes
+    before dtype.  When `dtype` is given and the implementation does
+    not handle it, the dtype-suffixed sibling (`<name>_u8` for uint8)
+    is tried before raising.
     """
     name = default_backend() if backend == "auto" else backend
     impls = implementations(op)
@@ -146,6 +166,17 @@ def resolve(op: str, backend: str = "auto", *,
         raise KeyError(f"op {op!r} has no implementation {name!r}; "
                        f"available: {sorted(impls)} (legacy backends: "
                        f"{known_backends()} or 'auto')")
+    if layout is not None and layout not in impls[name].layouts:
+        suffix = _LAYOUT_SUFFIX.get(layout)
+        alt = f"{name}_{suffix}" if suffix else None
+        if alt is not None and alt in impls \
+                and layout in impls[alt].layouts:
+            name = alt
+        else:
+            raise ValueError(
+                f"op {op!r} implementation {name!r} does not consume "
+                f"layout {layout!r} (consumes {impls[name].layouts}); "
+                f"no {layout}-capable variant registered")
     if dtype is not None and dtype not in impls[name].dtypes:
         alt = f"{name}_u8" if dtype == "uint8" else None
         if alt is not None and alt in impls:
@@ -158,12 +189,21 @@ def resolve(op: str, backend: str = "auto", *,
 
 
 def dispatch(op: str, backend: str, *args: Any,
-             dtype: Optional[str] = None, **kw: Any) -> Any:
+             dtype: Optional[str] = None,
+             layout: Optional[str] = None, **kw: Any) -> Any:
     """Resolve and call: the single entry every `kernels.ops` public
     wrapper (and its legacy `backend=` shim) funnels through."""
-    impl = get(op, resolve(op, backend, dtype=dtype))
+    impl = get(op, resolve(op, backend, dtype=dtype, layout=layout))
     _CALL_STATS[op] = _CALL_STATS.get(op, 0) + 1
     return impl.fn(*args, **kw)
+
+
+def impls_for_layout(op: str, layout: str) -> list[str]:
+    """Implementation names of `op` that consume `layout`'s arrays
+    (the CI capability smoke asserts this is non-empty for every op a
+    layout claims)."""
+    return sorted(name for name, impl in implementations(op).items()
+                  if layout in impl.layouts)
 
 
 # --------------------------------------------------------------------------
@@ -192,6 +232,7 @@ def table() -> list[dict[str, str]]:
                 "family": impl.family,
                 "dtypes": "/".join(impl.dtypes),
                 "platforms": "/".join(impl.platforms),
+                "layouts": "/".join(impl.layouts),
                 "constraints": impl.constraints,
             })
     return rows
@@ -201,7 +242,8 @@ def format_table() -> str:
     """`table()` rendered as a markdown table (docs/api.md embeds the
     output of this function; `launch.serve --show-kernels` prints it)."""
     rows = table()
-    cols = ("op", "impl", "family", "dtypes", "platforms", "constraints")
+    cols = ("op", "impl", "family", "dtypes", "platforms", "layouts",
+            "constraints")
     widths = {c: max(len(c), *(len(r[c]) for r in rows)) for c in cols}
     def line(vals):
         return "| " + " | ".join(v.ljust(widths[c])

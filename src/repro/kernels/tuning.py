@@ -120,3 +120,68 @@ def best_fused_blocks(F: int, D: int, L: int, C: int,
     if not cands:
         return 128, 16
     return cands[0].block_n, cands[0].block_t
+
+
+# --------------------------------------------------------------------------
+# Physical-layout selection (see repro.core.layout)
+# --------------------------------------------------------------------------
+# depth_grouped pays per-group kernel dispatches to shrink leaf tables;
+# only worth it once the shallow trees save a real fraction of the
+# padded-to-Dmax table (and more than one group exists).
+GROUPED_MIN_SAVINGS = 0.30
+# depth_major trades a (T, D, F) f32 one-hot gather matrix for never
+# rebuilding iota/one-hot in the leaf_index hot loop; past this size the
+# matrix stops being a free win (HBM traffic per tree block grows).
+DEPTH_MAJOR_MAX_ONEHOT_BYTES = 8 * 1024 * 1024
+
+
+def layout_costs(true_depths, n_outputs: int, n_features: int
+                 ) -> dict[str, int]:
+    """Leaf-table / lowered-array byte costs per layout for an ensemble
+    with the given per-tree true depths (the inputs `best_layout` ranks
+    on; exposed for the bench and docs)."""
+    import numpy as np
+    d = np.asarray(true_depths, np.int64)
+    dmax = int(d.max()) if d.size else 1
+    soa_leaf = int(d.size) * (1 << dmax) * n_outputs * 4
+    grouped_leaf = int(((1 << np.maximum(d, 1)) * n_outputs * 4).sum())
+    onehot = int(d.size) * dmax * n_features * 4
+    return {"soa_leaf_bytes": soa_leaf,
+            "depth_grouped_leaf_bytes": grouped_leaf,
+            "depth_major_onehot_bytes": onehot}
+
+
+def best_layout(true_depths, n_outputs: int, n_features: int, *,
+                backend: str = "ref") -> str:
+    """Pick a physical layout from the ensemble's shape, the same way
+    `best_fused_blocks` picks block shapes: from the depth histogram,
+    tree count, the leaf-table bytes each layout would carry, and the
+    kernel family that will consume it.
+
+      depth_grouped  when true depths mix and the per-depth leaf tables
+                     save >= GROUPED_MIN_SAVINGS of the soa table
+                     (less index+gather work on any backend)
+      depth_major    pallas-family kernels on (near-)uniform depths
+                     when the precomputed one-hot gather matrix stays
+                     small enough — it removes the per-call iota /
+                     one-hot build from the kernel body; the jnp
+                     reference gathers cheaper than it matmuls, so ref
+                     stays on soa
+      soa            everything else (and the safe fallback: tracer
+                     ensembles never reach here — the plan resolver
+                     pins them to soa)
+    """
+    import numpy as np
+    d = np.asarray(true_depths, np.int64)
+    if d.size == 0:
+        return "soa"
+    costs = layout_costs(d, n_outputs, n_features)
+    if len(set(d.tolist())) > 1:
+        savings = 1.0 - (costs["depth_grouped_leaf_bytes"]
+                         / max(costs["soa_leaf_bytes"], 1))
+        if savings >= GROUPED_MIN_SAVINGS:
+            return "depth_grouped"
+    if backend.startswith("pallas") and \
+            costs["depth_major_onehot_bytes"] <= DEPTH_MAJOR_MAX_ONEHOT_BYTES:
+        return "depth_major"
+    return "soa"

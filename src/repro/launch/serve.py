@@ -30,6 +30,7 @@ def serve_gbdt(args):
     # One PredictConfig for the registry; each server builds its
     # compiled plan from it at registration (auto resolved there).
     config = PredictConfig(strategy=args.strategy, backend=args.backend,
+                           layout=args.layout,
                            tree_block=args.tree_block)
     registry = ModelRegistry(max_batch=args.batch, config=config,
                              min_bucket=args.min_bucket)
@@ -44,9 +45,13 @@ def serve_gbdt(args):
         registry.register(f"{args.dataset}-v{i}",
                           ens.slice_trees(i * per,
                                           min((i + 1) * per, ens.n_trees)))
+    stats = server.predictor.stats
     print(f"[serve:gbdt] model={args.dataset} plan={server.config} "
           f"buckets={server.buckets} "
           f"schema={server.schema_fingerprint}")
+    print(f"[serve:gbdt] layout={stats['layout']} "
+          f"lowered in {stats['lower_time_s'] * 1e3:.1f}ms "
+          f"({stats['build_model_pads']} model pads)")
     t0 = time.perf_counter()
     n = 200
     for i in range(n):
@@ -99,6 +104,11 @@ def main():
                     default="auto")
     ap.add_argument("--backend", choices=["auto", "pallas", "ref"],
                     default="auto")
+    ap.add_argument("--layout", default="auto",
+                    choices=["auto", "soa", "depth_major", "depth_grouped"],
+                    help="physical model layout the plan lowers to "
+                         "(auto = picked from the ensemble's depth "
+                         "histogram by kernels.tuning.best_layout)")
     ap.add_argument("--tree-block", type=int, default=0,
                     help="staged-path tree block (0 = whole ensemble)")
     ap.add_argument("--min-bucket", type=int, default=16,
@@ -110,8 +120,27 @@ def main():
                     help="print the kernel registry table and exit")
     args = ap.parse_args()
     if args.show_kernels:
+        from repro.core import layout as layout_mod
         from repro.kernels import registry as kernel_registry
+        from repro.kernels import tuning
         print(kernel_registry.format_table())
+        print()
+        print(layout_mod.format_layout_table())
+        # the layout this process would resolve for the requested flag
+        # (auto shown against two canned depth histograms, since no
+        # model is trained under --show-kernels)
+        if args.layout != "auto":
+            print(f"\nresolved layout: {args.layout} (pinned by --layout)")
+        else:
+            import numpy as np
+            backend = (args.backend if args.backend != "auto"
+                       else kernel_registry.default_backend())
+            uniform = tuning.best_layout(np.full(100, 6), 1, 54,
+                                         backend=backend)
+            mixed = tuning.best_layout(np.tile([2, 3, 4, 6], 25), 1, 54,
+                                       backend=backend)
+            print(f"\nresolved layout (auto, {backend} backend): "
+                  f"uniform-depth -> {uniform}, mixed-depth -> {mixed}")
         return
     (serve_gbdt if args.mode == "gbdt" else serve_lm)(args)
 

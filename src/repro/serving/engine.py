@@ -91,6 +91,13 @@ class GBDTServer:
                                          expected_batch=max_batch,
                                          on_trace=self.metrics.note_trace,
                                          prepare=mesh is None)
+        # surface the physical layout that actually serves in this
+        # model's metrics: mesh servers score exclusively through the
+        # sharded closure, whose per-shard plans always lower to soa
+        # (tracer shards cannot regroup), regardless of the resolved
+        # local-plan layout
+        self.metrics.layout = ("soa" if mesh is not None
+                               else self.predictor.config.layout)
         # sharded predict stays on the paper-faithful staged pipeline
         # unless the caller explicitly asked for fused (fused-inside-
         # shard_map is not a serving-supported combination for `auto`)

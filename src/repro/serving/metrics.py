@@ -21,6 +21,11 @@ class ServerMetrics:
 
     def __init__(self, name: str = "model"):
         self.name = name
+        # Physical model layout the server's plan lowered to (set by
+        # GBDTServer once its Predictor is built; None until then).
+        # Exported in snapshots so dashboards can see which layout a
+        # deployed model is actually serving with.
+        self.layout: str | None = None
         self._lock = threading.Lock()
         self._t0 = time.perf_counter()
         self.requests = 0
@@ -63,6 +68,7 @@ class ServerMetrics:
             pad_total = self.served_rows + self.padded_rows
             return {
                 "model": self.name,
+                "layout": self.layout,
                 "requests": self.requests,
                 "batches": self.batches,
                 "recompiles": self.traces,

@@ -83,6 +83,37 @@ def test_ensemble_roundtrip(tmp_path):
     assert ens2.describe() == ens.describe()
 
 
+def test_ensemble_pytree_roundtrip():
+    """Regression: unflattening must bypass the base_score default.
+
+    The old registration re-ran __post_init__ on every tree_unflatten,
+    so any structural map whose leaves were not arrays (tree_map to
+    None, tree_transpose) crashed on `leaf_values.shape`.
+    """
+    import jax
+    ens = ObliviousEnsemble(
+        jnp.zeros((2, 3), jnp.int32), jnp.ones((2, 3), jnp.int32),
+        jnp.zeros((2, 8, 1)), jnp.zeros((4, 5)), jnp.zeros((5,), jnp.int32))
+    # defaulted base_score is materialized at construction
+    assert ens.base_score.shape == (1,)
+    leaves, td = jax.tree_util.tree_flatten(ens)
+    assert len(leaves) == 6               # base_score is a real leaf
+    back = jax.tree_util.tree_unflatten(td, leaves)
+    np.testing.assert_array_equal(np.asarray(back.base_score),
+                                  np.asarray(ens.base_score))
+    # structural maps with non-array leaves must not crash
+    nones = jax.tree_util.tree_map(lambda _: None, ens,
+                                   is_leaf=lambda v: v is None)
+    assert nones.base_score is None and nones.leaf_values is None
+    # and identity maps round-trip values exactly
+    mapped = jax.tree_util.tree_map(lambda a: a + 0, ens)
+    np.testing.assert_array_equal(np.asarray(mapped.split_bins),
+                                  np.asarray(ens.split_bins))
+    # jit treats the ensemble as a transparent pytree
+    total = jax.jit(lambda e: e.leaf_values.sum() + e.base_score.sum())(ens)
+    assert float(total) == 0.0
+
+
 def test_borders_monotone_and_binarize_range():
     rng = np.random.default_rng(0)
     x = rng.normal(size=(500, 7)).astype(np.float32)

@@ -262,6 +262,93 @@ def test_catboost_json_roundtrip_matches_hand_built(tmp_path):
             ens, x, strategy="staged", backend="ref"))[:, 0], rtol=1e-6)
 
 
+def test_catboost_json_multiclass_scale_and_bias(tmp_path):
+    """Multiclass export edge: per-class bias vector + scale applied to
+    every leaf value; 3-class leaf tables are leaf-major."""
+    model = {
+        "features_info": {"float_features": [
+            {"flat_feature_index": 0, "borders": [0.0]},
+        ]},
+        "oblivious_trees": [
+            {"splits": [
+                {"split_type": "FloatFeature", "float_feature_index": 0,
+                 "border": 0.0},
+            ],
+             # leaf-major: leaf 0 -> classes (1, 2, 3), leaf 1 -> (4, 5, 6)
+             "leaf_values": [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]},
+        ],
+        "scale_and_bias": [0.5, [0.1, 0.2, 0.3]],
+    }
+    path = tmp_path / "mc.json"
+    path.write_text(json.dumps(model))
+    ens = load_catboost_json(path)
+    assert ens.n_outputs == 3
+    np.testing.assert_allclose(np.asarray(ens.base_score), [0.1, 0.2, 0.3])
+    np.testing.assert_allclose(np.asarray(ens.leaf_values[0, 0]),
+                               [0.5, 1.0, 1.5])
+    plan = Predictor.build(ens, strategy="staged", backend="ref")
+    x = jnp.asarray([[-1.0], [1.0]], jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(plan.raw(x)),
+        np.asarray([[0.6, 1.2, 1.8], [2.1, 2.7, 3.3]]), rtol=1e-6)
+    # mismatched bias width is a hard error
+    model["scale_and_bias"] = [1.0, [0.1, 0.2]]
+    path.write_text(json.dumps(model))
+    with pytest.raises(ValueError, match="scale_and_bias"):
+        load_catboost_json(path)
+
+
+def _nonuniform_json(tmp_path):
+    """Depths 3 / 1 / 2: exercises true_depths + depth_grouped."""
+    b = {"split_type": "FloatFeature", "float_feature_index": 0}
+    model = {
+        "features_info": {"float_features": [
+            {"flat_feature_index": 0, "borders": [0.0, 1.0, 2.0]},
+        ]},
+        "oblivious_trees": [
+            {"splits": [dict(b, border=0.0), dict(b, border=1.0),
+                        dict(b, border=2.0)],
+             "leaf_values": [float(v) for v in range(8)]},
+            {"splits": [dict(b, border=1.0)],
+             "leaf_values": [10.0, 20.0]},
+            {"splits": [dict(b, border=0.0), dict(b, border=2.0)],
+             "leaf_values": [1.0, 2.0, 3.0, 4.0]},
+        ],
+    }
+    path = tmp_path / "mixed.json"
+    path.write_text(json.dumps(model))
+    return path
+
+
+def test_catboost_json_nonuniform_depths_lower_grouped(tmp_path):
+    ens = load_catboost_json(_nonuniform_json(tmp_path))
+    assert ens.depth == 3
+    np.testing.assert_array_equal(ens.true_depths, [3, 1, 2])
+    # shallow trees use the PAD_SPLIT_BIN always-left convention: the
+    # padded levels can never fire, so their leaf-index bits stay 0
+    sb = np.asarray(ens.split_bins)
+    assert sb[1, 1] == PAD_SPLIT_BIN and sb[1, 2] == PAD_SPLIT_BIN
+    assert sb[2, 2] == PAD_SPLIT_BIN
+    np.testing.assert_array_equal(np.asarray(ens.leaf_values)[1, 2:, 0], 0.0)
+    # an auto plan on this model picks depth_grouped and matches ref
+    from repro.kernels import ref
+    plan = Predictor.build(ens, PredictConfig(strategy="staged",
+                                              backend="ref"))
+    assert plan.config.layout == "depth_grouped"
+    lowered = plan.describe()["lowered"]
+    assert lowered["groups"] == {1: 1, 2: 1, 3: 1}
+    x = jnp.asarray([[-0.5], [0.5], [1.5], [2.5]], jnp.float32)
+    want = np.asarray(ref.fused_predict(
+        x, ens.borders, ens.split_features, ens.split_bins,
+        ens.leaf_values))
+    np.testing.assert_allclose(np.asarray(plan.raw(x)), want,
+                               rtol=1e-6, atol=1e-6)
+    # hand check: x=2.5 crosses every border -> tree0 leaf 7,
+    # tree1 leaf 1, tree2 leaf 3
+    np.testing.assert_allclose(np.asarray(plan.raw(x))[3, 0],
+                               7.0 + 20.0 + 4.0, rtol=1e-6)
+
+
 def test_catboost_json_rejects_malformed(tmp_path):
     bad = tmp_path / "bad.json"
     bad.write_text(json.dumps({"oblivious_trees": []}))

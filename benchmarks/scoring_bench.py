@@ -1,0 +1,287 @@
+"""Bulk dataset-apply benchmark: naive predict_batch loop vs BulkScorer.
+
+The paper's headline numbers are whole-dataset model application
+(`ApplyModelMulti` over millions of rows).  Before this subsystem, the
+only way to score a dataset bigger than one batch was to loop
+`GBDTServer.predict_batch` — which chunks at the online path's largest
+*bucket* (hundreds of rows), paying a dispatch + in-jit binarize +
+unpad round-trip per tiny chunk.  The scenarios:
+
+  naive          GBDTServer.predict_batch over the full matrix — the
+                 predict_batch Python loop (bucket-sized chunks,
+                 binarize inside every jitted call, host sync per
+                 chunk)
+  bulk           BulkScorer, float chunks (binarize still in-jit, but
+                 planner-sized chunks, prefetch and lag-1 sync)
+  bulk-prequant  BulkScorer, prequantized pipeline: the prefetch
+                 worker binarizes chunk k+1 into a uint8 pool while
+                 chunk k scores — binarize leaves the critical path
+                 and the score entries run the u8 kernels
+
+All three run the same plan configuration (staged/ref — the measured
+backend on CPU containers), so outputs must match bit-for-bit, and the
+chunk-shape contract (<= 2 padded shapes per bulk run) is asserted.
+Rows come from a >= 100k-row synthetic covertype sweep
+(`SyntheticSource(repeat=...)` — out-of-core row counts at
+base-dataset memory).  Scenarios are timed in interleaved rounds (the
+`predictor_bench` trick) so shared-box drift hits all of them equally;
+the reported rows/s is the per-scenario median across rounds.
+
+Emits ``name,us_per_call,derived`` CSV rows like the sibling benches,
+and (unless ``--no-write``) one JSON per scenario into
+``results/perf/`` — the established perf-trajectory schema.  With
+``--check`` the process exits nonzero unless outputs match exactly,
+each bulk run stayed <= 2 shapes, and the best BulkScorer beats the
+naive loop (>= 2x full runs / >= 1.2x --quick, where the model is tiny
+and CI boxes noisy).
+
+  PYTHONPATH=src python -m benchmarks.scoring_bench [--quick] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[1] / "results" / "perf"
+
+
+def eprint(*a):
+    print(*a, file=sys.stderr, flush=True)
+
+
+class _Window:
+    """First-n-rows view of a source (warmup runs)."""
+
+    def __init__(self, source, n):
+        self._s, self.n_rows = source, n
+        self.n_features = source.n_features
+
+    def read(self, start, stop):
+        return self._s.read(start, stop)
+
+
+class NaiveRunner:
+    """The pre-subsystem path: predict_batch in a Python loop."""
+
+    label = "naive"
+
+    def __init__(self, ens, source, max_batch: int):
+        from repro.core.predictor import PredictConfig
+        from repro.serving.engine import GBDTServer
+
+        self.source = source
+        self.step = max_batch * 16       # a realistic caller's read size
+        self.server = GBDTServer(
+            ens, config=PredictConfig(strategy="staged", backend="ref"),
+            max_batch=max_batch, name="naive-bulk")
+        # warm the compile caches over the full-bucket shape AND the
+        # run's remainder shapes (steady state is the claim everywhere)
+        warm = min(source.n_rows, max_batch + source.n_rows % max_batch)
+        self.server.predict_batch(source.read(0, warm))
+
+    def run(self) -> tuple[float, np.ndarray]:
+        src = self.source
+        c = self.server.predictor.ensemble.n_outputs
+        out = np.zeros((src.n_rows, 2 if c == 1 else c), np.float32)
+        t0 = time.perf_counter()
+        for s in range(0, src.n_rows, self.step):
+            stop = min(s + self.step, src.n_rows)
+            out[s:stop] = self.server.predict_batch(src.read(s, stop))
+        return time.perf_counter() - t0, out
+
+    def stats(self) -> dict:
+        return {"recompiles": self.server.metrics.snapshot()["recompiles"]}
+
+    def close(self):
+        self.server.close()
+
+
+class BulkRunner:
+    label = "bulk"
+
+    def __init__(self, ens, source, chunk_rows: int, *,
+                 prequantize: bool, label: str):
+        from repro.core.predictor import PredictConfig, Predictor
+        from repro.scoring import ArraySink, BulkScorer, ScoreConfig
+
+        self.label = label
+        self.source = source
+        self._sink_cls = ArraySink
+        self.scorer = BulkScorer(
+            Predictor.build(ens, PredictConfig(strategy="staged",
+                                               backend="ref")),
+            ScoreConfig(chunk_rows=chunk_rows, output="proba",
+                        prequantize=prequantize))
+        # warmup covering the full-chunk shape and the real run's tail
+        # bucket, so the timed rounds see zero compiles
+        chunk = self.scorer.resolve_chunk_rows(source.n_rows)
+        warm = min(source.n_rows, chunk + source.n_rows % chunk)
+        self.scorer.score(_Window(source, warm), ArraySink())
+        self.last = None
+
+    def run(self) -> tuple[float, np.ndarray]:
+        res = self.scorer.score(self.source, self._sink_cls())
+        self.last = res
+        return res.metrics["wall_s"], res.output
+
+    def stats(self) -> dict:
+        m = self.last.metrics
+        return {"chunk_rows": self.last.chunk_rows,
+                "chunk_shapes": list(self.last.chunk_shapes),
+                "chunks": m["chunks"], "compiles": m["compiles"],
+                "quantize_frac": m["quantize_frac"],
+                "pad_overhead": m["pad_overhead"]}
+
+    def close(self):
+        pass
+
+
+def _write_scenario_json(out_dir: pathlib.Path, name: str, scenario: str,
+                         fields: dict) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "scenario": scenario,
+        "layout": "auto",
+        **fields,
+    }
+    (out_dir / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless outputs match exactly, bulk "
+                         "runs stayed <= 2 shapes, and BulkScorer "
+                         "beats the naive loop")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="fixed chunk rows (0 = the tuning planner's "
+                         "working-set-budgeted choice)")
+    ap.add_argument("--max-batch", type=int, default=256,
+                    help="the naive server's online max_batch (its "
+                         "bulk path chunks at the top bucket)")
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="interleaved timing rounds per scenario "
+                         "(0 = 2 quick / 3 full)")
+    ap.add_argument("--out-dir", default=str(RESULTS_DIR))
+    ap.add_argument("--no-write", action="store_true")
+    args = ap.parse_args()
+
+    n_trees = 30 if args.quick else 100
+    # full run: scale 0.05 "all" = ~23k base rows x5 = ~116k-row sweep
+    scale = 0.02 if args.quick else 0.05
+    repeat = 2 if args.quick else 5
+    rounds = args.rounds or (2 if args.quick else 3)
+
+    from benchmarks.serving_bench import _build_model
+    from repro.scoring import SyntheticSource
+
+    ens, _ = _build_model(n_trees)
+    source = SyntheticSource("covertype", scale=scale, split="all",
+                             repeat=repeat)
+    rows = source.n_rows
+    eprint(f"# scoring bench: {rows} rows x {source.n_features} features "
+           f"(base {source.base_rows} x repeat {repeat}), {n_trees} "
+           f"trees, chunk={'auto' if not args.chunk else args.chunk}, "
+           f"naive max_batch={args.max_batch}, {rounds} interleaved "
+           f"rounds, ref backend")
+
+    runners = [
+        NaiveRunner(ens, source, args.max_batch),
+        BulkRunner(ens, source, args.chunk, prequantize=False,
+                   label="bulk"),
+        BulkRunner(ens, source, args.chunk, prequantize=True,
+                   label="bulk-prequant"),
+    ]
+    try:
+        walls: dict[str, list[float]] = {r.label: [] for r in runners}
+        scores: dict[str, np.ndarray] = {}
+        for _ in range(rounds):
+            for r in runners:
+                wall, out = r.run()
+                walls[r.label].append(wall)
+                scores[r.label] = out
+        med = {label: float(np.median(w)) for label, w in walls.items()}
+        stats = {r.label: r.stats() for r in runners}
+    finally:
+        for r in runners:
+            r.close()
+
+    err = {label: float(np.max(np.abs(scores["naive"] - scores[label])))
+           for label in ("bulk", "bulk-prequant")}
+    rps = {label: rows / w for label, w in med.items()}
+
+    eprint(f"{'scenario':16s} {'rows/s':>10s} {'wall_s':>8s} "
+           f"{'vs naive':>9s} {'shapes':>7s} {'err':>9s}")
+    eprint(f"{'naive':16s} {rps['naive']:10.0f} {med['naive']:8.2f} "
+           f"{'1.00x':>9s} {'-':>7s} {'-':>9s}")
+    for label in ("bulk", "bulk-prequant"):
+        eprint(f"{label:16s} {rps[label]:10.0f} {med[label]:8.2f} "
+               f"{rps[label] / rps['naive']:8.2f}x "
+               f"{len(stats[label]['chunk_shapes']):7d} "
+               f"{err[label]:9.1e}")
+    eprint(f"chunk={stats['bulk']['chunk_rows']} rows; bulk-prequant "
+           f"quantize share of busy time: "
+           f"{stats['bulk-prequant']['quantize_frac']:.0%} (overlapped "
+           f"on the prefetch worker)")
+
+    print("name,us_per_call,derived")
+    print(f"scoring/naive,{med['naive'] / rows * 1e6:.2f},"
+          f"rows_per_s={rps['naive']:.0f}")
+    for label in ("bulk", "bulk-prequant"):
+        print(f"scoring/{label},{med[label] / rows * 1e6:.2f},"
+              f"rows_per_s={rps[label]:.0f};speedup_vs_naive="
+              f"{rps[label] / rps['naive']:.2f};"
+              f"max_abs_err={err[label]:.1e}")
+
+    if not args.no_write:
+        out_dir = pathlib.Path(args.out_dir)
+        common = {"rows": rows, "n_trees": n_trees,
+                  "chunk": stats["bulk"]["chunk_rows"],
+                  "rounds": rounds, "backend": "ref",
+                  "quick": bool(args.quick)}
+        _write_scenario_json(
+            out_dir, "scoring-bench__naive", "scoring-naive",
+            {**common, "rows_per_s": rps["naive"],
+             "wall_s": med["naive"], "max_batch": args.max_batch})
+        for label in ("bulk", "bulk-prequant"):
+            _write_scenario_json(
+                out_dir, f"scoring-bench__{label}", f"scoring-{label}",
+                {**common, "rows_per_s": rps[label],
+                 "wall_s": med[label],
+                 "speedup_vs_naive": rps[label] / rps["naive"],
+                 "max_abs_err": err[label], **stats[label]})
+        eprint(f"# wrote result JSONs to {out_dir}")
+
+    if args.check:
+        if err["bulk"] != 0.0 or err["bulk-prequant"] != 0.0:
+            eprint("FAIL: bulk output diverges from the naive "
+                   "predict_batch loop (same plan, same math)")
+            return 1
+        for label in ("bulk", "bulk-prequant"):
+            shapes = stats[label]["chunk_shapes"]
+            if len(shapes) > 2:
+                eprint(f"FAIL: {label} compiled {len(shapes)} chunk "
+                       f"shapes ({shapes}); the planner contract is "
+                       "<= 2")
+                return 1
+        best = max(rps["bulk"], rps["bulk-prequant"])
+        floor = 1.2 if args.quick else 2.0
+        if best < floor * rps["naive"]:
+            eprint(f"FAIL: best BulkScorer {best:.0f} rows/s is below "
+                   f"{floor}x the naive loop ({rps['naive']:.0f} "
+                   f"rows/s)")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

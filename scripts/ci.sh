@@ -61,6 +61,20 @@ python examples/quickstart.py
 echo "== serving benchmark (quick) =="
 python -m benchmarks.serving_bench --quick >/dev/null
 
+echo "== scoring smoke (BulkScorer end-to-end via launch/score.py) =="
+# small synthetic dataset through the bulk-scoring CLI; --check verifies
+# the streamed output against the one-shot Predictor path bit-for-bit
+python -m repro.launch.score --dataset covertype --scale 0.002 \
+    --trees 10 --chunk 256 --strategy staged --backend ref \
+    --check >/dev/null
+
+echo "== scoring benchmark (quick, parity + chunk-shape + throughput gate) =="
+# --check fails the build unless BulkScorer output matches the naive
+# predict_batch loop exactly, every bulk run compiled <= 2 chunk
+# shapes, and the best scorer beats the naive loop (1.2x floor in
+# quick mode).  --no-write keeps the committed results/perf/ JSONs.
+python -m benchmarks.scoring_bench --quick --check --no-write >/dev/null
+
 echo "== predictor smoke benchmark (prepared / prequantized / registry / layouts) =="
 # --check fails the build if the prepared-plan path is below parity
 # with the kwarg path it replaced, if a quantized scenario

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -151,6 +152,92 @@ def quantize_pool(x, borders, *, backend: str = "auto") -> QuantizedPool:
     x = jnp.asarray(x, jnp.float32)
     bins = ops.binarize_u8(x, borders, backend=backend)
     return QuantizedPool(bins, borders_fingerprint(borders))
+
+
+def quantize_pool_chunked(x_iter, borders, *,
+                          backend: str = "auto") -> QuantizedPool:
+    """Build a `QuantizedPool` from an iterator of float row-chunks.
+
+    The streaming counterpart of `quantize_pool`: each (n_i, F) chunk is
+    binarized independently and only the one-byte bins are retained, so
+    peak float memory is O(largest chunk) while the finished pool is the
+    same N x F uint8 array `quantize_pool` would have produced on the
+    concatenated matrix (binarization is row-independent).  This is the
+    memory contract the bulk scorer's prequantize path depends on —
+    datasets that never fit in float32 still fit as bins (4x smaller),
+    and datasets that don't even fit as bins stream chunk-by-chunk
+    through `repro.scoring.BulkScorer` instead of pooling at all.
+    """
+    if borders.shape[0] > MAX_BINS - 1:
+        raise ValueError(
+            f"quantize_pool_chunked needs <= {MAX_BINS - 1} borders for "
+            f"uint8 bins, got {borders.shape[0]}")
+    parts: list[np.ndarray] = []
+    n_features = int(borders.shape[1])
+    for chunk in x_iter:
+        chunk = np.asarray(chunk, np.float32)
+        if chunk.ndim != 2 or chunk.shape[1] != n_features:
+            raise ValueError(
+                f"chunk shape {chunk.shape} does not match the "
+                f"(n, {n_features}) the borders describe")
+        if chunk.shape[0] == 0:
+            continue
+        parts.append(np.asarray(
+            ops.binarize_u8(jnp.asarray(chunk), borders, backend=backend),
+            np.uint8))
+    bins = (np.concatenate(parts, axis=0) if parts
+            else np.zeros((0, n_features), np.uint8))
+    return QuantizedPool(jnp.asarray(bins), borders_fingerprint(borders))
+
+
+def compute_borders_chunked(x_iter, max_bins: int = 64, *,
+                            sample_rows: int = 65536, seed: int = 0
+                            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """`compute_borders` over a row-chunk iterator, via reservoir sample.
+
+    Streams (n_i, F) float chunks, keeping a uniform row reservoir of at
+    most `sample_rows` rows, then computes quantile borders on the
+    sample — border computation never materializes the full float
+    matrix.  When the stream holds <= `sample_rows` rows the result is
+    exactly `compute_borders` on the concatenated matrix (quantiles are
+    order-independent and no row is dropped); beyond that the borders
+    are sample-quantile approximations, which is also what CatBoost's
+    own subsampled border builder does for large pools.
+    """
+    rng = np.random.default_rng(seed)
+    reservoir: Optional[np.ndarray] = None
+    seen = 0
+    for chunk in x_iter:
+        chunk = np.asarray(chunk, np.float32)
+        if chunk.ndim != 2:
+            raise ValueError(f"chunks must be (n, F), got {chunk.shape}")
+        if chunk.shape[0] == 0:
+            continue
+        if reservoir is None:
+            reservoir = np.empty((0, chunk.shape[1]), np.float32)
+        if reservoir.shape[1] != chunk.shape[1]:
+            raise ValueError(f"ragged chunk widths: {reservoir.shape[1]} "
+                             f"then {chunk.shape[1]}")
+        take = min(max(sample_rows - reservoir.shape[0], 0),
+                   chunk.shape[0])
+        if take:
+            reservoir = np.concatenate([reservoir, chunk[:take]], axis=0)
+            chunk = chunk[take:]
+            seen += take
+        if chunk.shape[0] == 0:
+            continue
+        # classic reservoir replacement for the overflow rows: stream
+        # row k (0-based) replaces a uniform slot with prob S/(k+1);
+        # draws are vectorized, replacements applied in stream order so
+        # later rows overwrite earlier ones hitting the same slot
+        draws = rng.integers(0, seen + 1 + np.arange(chunk.shape[0]))
+        seen += chunk.shape[0]
+        for i in np.nonzero(draws < sample_rows)[0]:
+            reservoir[draws[i]] = chunk[i]
+    if reservoir is None:
+        raise ValueError("compute_borders_chunked needs at least one "
+                         "non-empty chunk")
+    return compute_borders(reservoir, max_bins)
 
 
 def binarize_matrix(x: jax.Array, borders: jax.Array, *,

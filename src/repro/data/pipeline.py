@@ -90,6 +90,11 @@ class Prefetcher:
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self.transform = transform
+        # A worker exception must reach the consumer: without this, an
+        # error raised by `it` or `transform` would hit the bare
+        # `finally: q.put(None)` and the consumer would see a clean
+        # end-of-stream — silently truncated output.
+        self._err: Optional[BaseException] = None
 
         def worker():
             try:
@@ -99,6 +104,8 @@ class Prefetcher:
                     if self.transform is not None:
                         item = self.transform(item)
                     self.q.put(item)
+            except BaseException as e:      # noqa: BLE001 — re-raised below
+                self._err = e
             finally:
                 self.q.put(None)
 
@@ -109,6 +116,9 @@ class Prefetcher:
         while True:
             item = self.q.get()
             if item is None:
+                if self._err is not None:
+                    err, self._err = self._err, None
+                    raise err
                 return
             yield item
 

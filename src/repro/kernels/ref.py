@@ -32,12 +32,31 @@ def binarize_u8(x: jax.Array, borders: jax.Array) -> jax.Array:
     CatBoost caps features at 255 borders precisely so the binarized
     pool fits one byte per (sample, feature); requires B <= 255 (bin
     ids span [0, B], so 255 is the largest id and still fits).
+
+    This is the *pool builder* — the CPU-side counterpart of CatBoost's
+    `BinarizeFloats` (which runs `upper_bound` binary search per value),
+    so it binarizes by per-column `searchsorted` over the sorted border
+    stack: O(N F log B) instead of the O(N F B) all-pairs comparison
+    panel `binarize` keeps.  `binarize` itself intentionally stays the
+    comparison-sum form: it is the numerics oracle for the Pallas
+    bit-plane kernels (the paper's `vmsgeu` loop), which compute
+    exactly that panel.  Results are bit-identical: borders columns are
+    sorted ascending with +inf padding, so #{b : x > b} ==
+    searchsorted(borders, x, 'left'); NaN (which every comparison
+    rejects -> bin 0) is masked explicitly since searchsorted would
+    sort it past +inf.
     """
     if borders.shape[0] > 255:
         raise ValueError(f"uint8 bins need <= 255 borders, got "
                          f"{borders.shape[0]} (see quantize.compute_borders"
                          " max_bins cap)")
-    return binarize(x, borders).astype(jnp.uint8)
+
+    def col(b, xc):
+        idx = jnp.searchsorted(b, xc, side="left")
+        return jnp.where(jnp.isnan(xc), 0, idx)
+
+    return jax.vmap(col, in_axes=(1, 1), out_axes=1)(
+        borders, x).astype(jnp.uint8)
 
 
 def leaf_index(bins: jax.Array, split_features: jax.Array,

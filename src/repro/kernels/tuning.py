@@ -123,6 +123,65 @@ def best_fused_blocks(F: int, D: int, L: int, C: int,
 
 
 # --------------------------------------------------------------------------
+# Bulk-scoring chunk planning (see repro.scoring.scorer)
+# --------------------------------------------------------------------------
+# Working-set budget per in-flight scoring chunk.  The binding
+# constraint on CPU (the measured backend in this container) is not
+# host RAM but the cache footprint of the staged kernels' per-chunk
+# intermediates — the (N, F, B) binarize comparison panel and the
+# (N, T, L) gather one-hot.  Chunks past the budget fall off a cache
+# cliff (measured: the float path's us/row triples from N=2048 to
+# N=4096 on a 100-tree covertype model); chunks far below it waste
+# dispatch overhead.  32 MiB lands the planner on the measured sweet
+# spot for paper-scale models while keeping a depth-2 prefetch
+# pipeline comfortably in memory.
+CHUNK_BUDGET_BYTES = 32 * 1024 * 1024
+MIN_CHUNK_ROWS = 256
+MAX_CHUNK_ROWS = 1 << 17          # dispatch overhead is long amortized
+
+
+def chunk_row_bytes(n_features: int, n_outputs: int, *,
+                    n_borders: int = 0, n_trees: int = 0,
+                    n_leaves: int = 0) -> int:
+    """Per-row working set of one scoring chunk.
+
+    Always counted: the float32 copy sliced from the source, its uint8
+    bins (the quantized pool), and the float32 output panel.  When the
+    model dims are known the staged-kernel intermediates dominate and
+    are added: the (F, B) binarize comparison panel and the (T, L)
+    leaf-gather one-hot, both float32 per row."""
+    base = 4 * n_features + n_features + 4 * max(n_outputs, 2)
+    base += 4 * n_features * n_borders       # binarize comparisons
+    base += 4 * n_trees * n_leaves           # gather one-hot
+    return base
+
+
+def best_chunk_rows(n_features: int, n_outputs: int, *,
+                    n_borders: int = 0, n_trees: int = 0,
+                    n_leaves: int = 0,
+                    budget_bytes: int = CHUNK_BUDGET_BYTES,
+                    n_rows: int | None = None) -> int:
+    """Pick the bulk scorer's fixed chunk shape, the way
+    `best_fused_blocks` picks block shapes: largest power-of-two row
+    count whose per-chunk working set fits the budget (pow2 so the
+    tail bucket ladder and the kernel block shapes divide it evenly),
+    clamped to [MIN_CHUNK_ROWS, MAX_CHUNK_ROWS].  A known small
+    `n_rows` caps the chunk at the first pow2 that covers the whole
+    dataset — no point compiling a shape 60x the data."""
+    per_row = chunk_row_bytes(n_features, n_outputs, n_borders=n_borders,
+                              n_trees=n_trees, n_leaves=n_leaves)
+    rows = MIN_CHUNK_ROWS
+    while rows * 2 <= MAX_CHUNK_ROWS and rows * 2 * per_row <= budget_bytes:
+        rows *= 2
+    if n_rows is not None and n_rows > 0:
+        cover = MIN_CHUNK_ROWS
+        while cover < n_rows:
+            cover *= 2
+        rows = min(rows, cover)
+    return rows
+
+
+# --------------------------------------------------------------------------
 # Physical-layout selection (see repro.core.layout)
 # --------------------------------------------------------------------------
 # depth_grouped pays per-group kernel dispatches to shrink leaf tables;

@@ -1,0 +1,22 @@
+"""Bulk scoring subsystem: streaming out-of-core dataset apply.
+
+The offline counterpart of `repro.serving` — apply one or many compiled
+`Predictor` plans to datasets that never fit in one batch (or in
+memory), at device speed and O(chunk) host memory.  See
+docs/scoring.md for the architecture and the memory/compile contracts.
+
+    from repro.scoring import (BulkScorer, ScoreConfig,
+                               NpyMemmapSource, NpySink)
+
+    result = BulkScorer(plan, ScoreConfig(output="raw")).score(
+        NpyMemmapSource("features.npy"), NpySink("scores.npy"))
+"""
+from repro.scoring import scorer, sinks, sources  # noqa: F401
+from repro.scoring.scorer import (BulkScorer, ChunkSpan,  # noqa: F401
+                                  ScoreConfig, ScoreResult,
+                                  ScoringMetrics, plan_chunks)
+from repro.scoring.sinks import (ArraySink, NpySink,  # noqa: F401
+                                 ScoreSink, StatsSink, TopKSink)
+from repro.scoring.sources import (ArraySource, NpyMemmapSource,  # noqa: F401
+                                   RowSource, SyntheticSource,
+                                   iter_chunks)

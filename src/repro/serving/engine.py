@@ -186,6 +186,35 @@ class GBDTServer:
             out.append(ys[:len(chunk)])
         return np.concatenate(out, axis=0)
 
+    def score_source(self, source, sinks=None, *,
+                     config=None, resume_from: int = 0, **score_kw):
+        """Bulk-apply this server's compiled plan to a whole dataset —
+        the bridge from online serving to offline jobs (nightly
+        rescore of the same deployed model, same plan, same compile
+        caches).  `source` is a `repro.scoring.RowSource`, `sinks` a
+        `ScoreSink` (or None for an in-memory array); returns the
+        `ScoreResult` whose metrics snapshot reports `rows_per_s` in
+        the same unit as this server's `metrics.snapshot()`.
+
+        Defaults to ``output="proba"`` — what this server's online
+        predicts return — unless the config says otherwise.
+        """
+        from repro.scoring.scorer import BulkScorer, ScoreConfig
+
+        if self._sharded is not None:
+            raise ValueError("score_source is not supported on mesh "
+                             "servers (the sharded pipeline binarizes "
+                             "per tree shard; run the mesh predict over "
+                             "batches instead)")
+        if config is None:
+            score_kw.setdefault("output", "proba")
+            config = ScoreConfig(**score_kw)
+        elif score_kw:
+            raise TypeError("pass either a ScoreConfig or config kwargs, "
+                            f"not both: {sorted(score_kw)}")
+        return BulkScorer(self.predictor, config).score(
+            source, sinks, resume_from=resume_from)
+
     def _empty_proba(self) -> np.ndarray:
         width = 2 if self.ensemble.n_outputs == 1 else \
             self.ensemble.n_outputs

@@ -5,6 +5,12 @@ designed to be called from *inside* a jitted function body: jax runs the
 Python body only when it traces (i.e. on a cache miss), so the call
 counts exactly the recompiles — the quantity the bucketing layer exists
 to bound.
+
+`PercentileReservoir` is the one percentile implementation both the
+online (`ServerMetrics`) and offline (`repro.scoring.ScoringMetrics`)
+dashboards sample latencies through, and both snapshots report
+`rows_per_s` — online requests/s and offline bulk throughput in the
+same unit, directly comparable.
 """
 from __future__ import annotations
 
@@ -14,6 +20,48 @@ import time
 from typing import Any
 
 import numpy as np
+
+
+class PercentileReservoir:
+    """Bounded uniform sample of a value stream for percentile queries.
+
+    Classic reservoir sampling: every value ever added has an equal
+    chance of being in the sample, so a burst of slow warmup compiles
+    cannot pin p99 forever the way a sliding window's eviction order
+    would.  Not thread-safe on its own — callers (ServerMetrics,
+    ScoringMetrics) hold their own lock around `add`/`percentile`.
+    """
+
+    def __init__(self, max_samples: int = 8192, seed: int = 0):
+        if max_samples < 1:
+            raise ValueError(f"max_samples must be >= 1, got {max_samples}")
+        self.max_samples = max_samples
+        self._values: list[float] = []
+        self._seen = 0
+        self._rng = random.Random(seed)
+
+    def add(self, value: float) -> None:
+        self._seen += 1
+        if len(self._values) < self.max_samples:
+            self._values.append(value)
+        else:
+            j = self._rng.randrange(self._seen)
+            if j < self.max_samples:
+                self._values[j] = value
+
+    def percentile(self, q: float) -> float:
+        """q-th percentile of the sample (0.0 when empty)."""
+        if not self._values:
+            return 0.0
+        return float(np.percentile(np.asarray(self._values), q))
+
+    def __len__(self) -> int:
+        return len(self._values)
+
+    @property
+    def seen(self) -> int:
+        """Total values ever added (>= len(self): the sample is bounded)."""
+        return self._seen
 
 
 class ServerMetrics:
@@ -33,9 +81,7 @@ class ServerMetrics:
         self.padded_rows = 0
         self.served_rows = 0
         self.traces = 0
-        self._lat_s: list[float] = []
-        self._lat_seen = 0
-        self._rng = random.Random(0)
+        self._lat = PercentileReservoir(self.MAX_LAT_SAMPLES)
 
     # -- recording ---------------------------------------------------------
     def note_trace(self) -> None:
@@ -50,21 +96,12 @@ class ServerMetrics:
             self.requests += n_valid
             self.served_rows += n_valid
             self.padded_rows += n_padded - n_valid
-            # reservoir sampling: every batch has an equal chance of being
-            # in the percentile sample, so warmup compiles can't pin p99
-            self._lat_seen += 1
-            if len(self._lat_s) < self.MAX_LAT_SAMPLES:
-                self._lat_s.append(latency_s)
-            else:
-                j = self._rng.randrange(self._lat_seen)
-                if j < self.MAX_LAT_SAMPLES:
-                    self._lat_s[j] = latency_s
+            self._lat.add(latency_s)
 
     # -- reporting ---------------------------------------------------------
     def snapshot(self) -> dict[str, Any]:
         with self._lock:
             dt = max(time.perf_counter() - self._t0, 1e-9)
-            lat = np.asarray(self._lat_s) * 1e3
             pad_total = self.served_rows + self.padded_rows
             return {
                 "model": self.name,
@@ -73,10 +110,12 @@ class ServerMetrics:
                 "batches": self.batches,
                 "recompiles": self.traces,
                 "requests_per_s": self.requests / dt,
-                "batch_p50_ms": float(np.percentile(lat, 50)) if lat.size
-                else 0.0,
-                "batch_p99_ms": float(np.percentile(lat, 99)) if lat.size
-                else 0.0,
+                # same unit the offline ScoringMetrics reports, so the
+                # online and bulk dashboards are directly comparable
+                # (for a server, every served row was a request row)
+                "rows_per_s": self.served_rows / dt,
+                "batch_p50_ms": self._lat.percentile(50) * 1e3,
+                "batch_p99_ms": self._lat.percentile(99) * 1e3,
                 "pad_overhead": (self.padded_rows / pad_total
                                  if pad_total else 0.0),
             }

@@ -25,11 +25,16 @@ path binarizes K times per batch; `ModelRegistry.predict_multi`
 quantizes once and scores K pools.
 
 Scenario 4 (``run_layouts``) sweeps the physical model layouts
-(`core.layout`: soa / depth_major / depth_grouped) over a mixed-depth
-covertype-style ensemble — the shape `depth_grouped` exists for: its
-shallow trees carry 2^d-entry leaf tables instead of 2^Dmax, so both
-the leaf-index and leaf-gather passes do measurably less work.  Every
-layout is parity-gated against the jnp reference.
+(`core.layout`: soa / depth_major / depth_grouped / bitpacked) over a
+mixed-depth covertype-style ensemble — the shape `depth_grouped` exists
+for: its shallow trees carry 2^d-entry leaf tables instead of 2^Dmax,
+so both the leaf-index and leaf-gather passes do measurably less work.
+`bitpacked` keeps the grouped tables but assembles leaf indexes on
+integer registers (word-packed comparisons, uint8 split planes), so on
+a uint8 pool it additionally skips the int32 promotion of the gathered
+comparison panel; its row reports ``speedup_vs_depth_grouped`` plus the
+u1 pool-plane shrink figures from ``describe()``.  Every layout is
+parity-gated against the jnp reference.
 
 Emits the same ``name,us_per_call,derived`` CSV rows as benchmarks.run,
 and (unless ``--no-write``) one JSON per scenario into
@@ -244,6 +249,17 @@ def run_layouts(n_trees: int, batch: int, iters: int) -> dict[str, dict]:
             "leaf_table_bytes": plan.lowered.leaf_table_bytes(),
             "lower_time_s": plan.stats["lower_time_s"],
         }
+        if name == "bitpacked":
+            desc = plan.lowered.describe()
+            out[name].update(
+                plane_bytes=desc["plane_bytes"],
+                binary_split=desc["binary_split"],
+                pool_row_bytes_u8=desc["pool_row_bytes_u8"],
+                pool_row_bytes_u1=desc["pool_row_bytes_u1"],
+                pool_shrink_x=desc["pool_shrink_x"])
+    for name in out:
+        out[name]["speedup_vs_depth_grouped"] = (
+            out["depth_grouped"]["us_per_call"] / out[name]["us_per_call"])
     return out
 
 
@@ -299,12 +315,14 @@ def main() -> int:
                 and rres["max_abs_err"] < 1e-4)
     # every lowered layout is the same math as the logical model: soa
     # and depth_major must be BIT-identical to the reference on the ref
-    # backend (integer-exact one-hot matmuls); depth_grouped
-    # reassociates the tree sum (same addends, per-depth order), hence
-    # float tolerance for it alone
+    # backend (integer-exact one-hot matmuls); depth_grouped and
+    # bitpacked reassociate the tree sum (same addends, per-depth-group
+    # order), hence float tolerance for those two — the bitpacked leaf
+    # *indexes* stay integer-exact, pinned by tests/test_differential.py
     l_parity = (lres["soa"]["max_abs_err"] == 0.0
                 and lres["depth_major"]["max_abs_err"] == 0.0
-                and lres["depth_grouped"]["max_abs_err"] < 1e-4)
+                and lres["depth_grouped"]["max_abs_err"] < 1e-4
+                and lres["bitpacked"]["max_abs_err"] < 1e-4)
 
     eprint(f"# predictor bench: batch={batch}, {n_trees} trees, "
            f"{iters} interleaved rounds, ref backend")
@@ -335,7 +353,11 @@ def main() -> int:
                f"err {v['max_abs_err']:.1e})")
     eprint(f"layout parity: {'OK' if l_parity else 'MISMATCH'}; "
            f"depth_grouped vs soa: "
-           f"{soa_us / lres['depth_grouped']['us_per_call']:.2f}x")
+           f"{soa_us / lres['depth_grouped']['us_per_call']:.2f}x; "
+           f"bitpacked vs depth_grouped: "
+           f"{lres['bitpacked']['speedup_vs_depth_grouped']:.2f}x "
+           f"(plane bytes {lres['bitpacked']['plane_bytes']}, "
+           f"pool shrink {lres['bitpacked']['pool_shrink_x']:.1f}x)")
 
     print("name,us_per_call,derived")
     for name in ("kwarg", "kwarg-jit", "prepared"):

@@ -37,6 +37,12 @@ else
     python -m pytest -x -q
 fi
 
+echo "== differential kernel harness (full registry capability matrix) =="
+# every (op x impl x layout x bin-dtype) cell of registry.table(),
+# enumerated at collection time, vs the ref oracle — its own step so a
+# kernel/oracle divergence is named before the broader suite output
+python -m pytest -x -q tests/test_differential.py
+
 echo "== kernel registry smoke (introspection surface) =="
 python -c "from repro.kernels import registry; rows = registry.table(); \
   assert all(any(r['op'] == op for r in rows) for op in registry.CORE_OPS); \
@@ -51,6 +57,11 @@ for name, spec in layout.LAYOUTS.items():
     for op in spec.claimed_ops:
         impls = registry.impls_for_layout(op, name)
         assert impls, f"layout {name} claims op {op} but no impl consumes it"
+# the integer bitpacked pipeline must keep its own structure kernels
+assert registry.impls_for_layout("leaf_index", "bitpacked"), \
+    "bitpacked lost its leaf_index impls"
+assert registry.impls_for_layout("fused_predict", "bitpacked"), \
+    "bitpacked lost its fused_predict impls"
 assert "layouts" in registry.format_table().splitlines()[0]
 print(layout.format_layout_table())
 EOF
@@ -80,10 +91,11 @@ echo "== predictor smoke benchmark (prepared / prequantized / registry / layouts
 # with the kwarg path it replaced, if a quantized scenario
 # (prepared+prequantized vs prepared-float, quantize-once score-many
 # over ModelRegistry) diverges from its float path (ref backend, so
-# same kernel math), or if any lowered layout (soa / depth_major /
-# depth_grouped swept over a mixed-depth ensemble) diverges from the
-# jnp reference — the layout parity gate.  --no-write keeps CI runs
-# from clobbering the committed results/perf/ trajectory.
+# same kernel math), or if any lowered layout (all four: soa /
+# depth_major / depth_grouped / bitpacked swept over a mixed-depth
+# ensemble) diverges from the jnp reference — the layout parity gate.
+# --no-write keeps CI runs from clobbering the committed results/perf/
+# trajectory.
 python -m benchmarks.predictor_bench --quick --check --no-write >/dev/null
 
 echo "CI OK"

@@ -13,7 +13,7 @@ the physical order a kernel family wants, pre-padded to that family's
 block contracts.  Kernels consume lowered arrays; plans store them; the
 tuner picks among them from the ensemble's shape.
 
-Three layouts:
+Four layouts:
 
   soa            today's structure-of-arrays — (T, D) splits, one
                  (T, 2^Dmax, C) leaf table — the compatibility default.
@@ -30,6 +30,17 @@ Three layouts:
                  CalcTreesBlockedImpl at depth granularity).  Note the
                  per-group summation reassociates the float tree sum
                  (same addends, different order).
+  bitpacked      depth-grouped structure with the split arrays
+                 transposed to (d, T_d) bit planes in the narrowest
+                 integer dtype that holds them: per depth the
+                 comparison bins >= sb is ONE bit per doc, 32 docs pack
+                 into a uint32 lane word (the paper's vmsgeu mask
+                 register) and the `_bp` kernels assemble leaf indexes
+                 via integer shift/or — no one-hot, no f32, no MXU
+                 until the leaf gather.  For binary-split schemas
+                 (<= 1 border per feature) the uint8 pool itself packs
+                 into u1 feature planes — `pack_pool_u1` — an 8x pool
+                 memory shrink.
 
 Every layout is bit-for-bit the same *math* as the logical model:
 identical leaf indices, identical per-tree leaf values.
@@ -232,6 +243,116 @@ class DepthGroupedLayout:
                            for g in self.groups}}
 
 
+@dataclasses.dataclass(frozen=True)
+class BitpackedGroup:
+    """All trees of one true depth, split arrays in bit-plane order."""
+    depth: int                   # static: true depth d of the group
+    split_features_bp: jax.Array  # (d, Tg_p) i32 — bit-plane transposed
+    split_bins_bp: jax.Array     # (d, Tg_p) u8 when thresholds fit, else i32
+    leaf_values: jax.Array       # (Tg_p, 2^d, C) f32
+
+    @property
+    def n_trees(self) -> int:
+        return self.split_features_bp.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class BitpackedLayout:
+    """Depth groups with integer bit-plane splits (the paper's
+    word-packed comparison loop): leaf indexes assemble via shift/or,
+    32-doc comparison bits pack into uint32 lanes, nothing touches f32
+    until the leaf gather."""
+    layout_name = "bitpacked"
+    borders: jax.Array           # (B, Fp) f32
+    groups: tuple                # tuple[BitpackedGroup, ...], depth asc
+    n_outputs: int = 1           # static
+    n_model_pads: int = 0        # static
+    binary_split: bool = False   # static: every feature has <= 1 border
+    n_features: int = 0          # static: logical pool width F
+
+    def leaf_sum(self, bins: jax.Array, *, backend: str,
+                 block_t: int) -> jax.Array:
+        acc = jnp.zeros((bins.shape[0], self.n_outputs), jnp.float32)
+        for g in self.groups:
+            idx = ops.leaf_index_bp_prepadded(bins, g.split_features_bp,
+                                              g.split_bins_bp,
+                                              backend=backend,
+                                              block_t=block_t)
+            acc = acc + ops.leaf_gather_prepadded(idx, g.leaf_values,
+                                                  backend=backend,
+                                                  block_t=block_t)
+        return acc
+
+    def fused_raw(self, x: jax.Array, *, backend: str, block_n: int,
+                  block_t: int) -> jax.Array:
+        if len(self.groups) == 1:
+            g = self.groups[0]
+            return ops.fused_predict_bp_prepadded(
+                x, self.borders, g.split_features_bp, g.split_bins_bp,
+                g.leaf_values, backend=backend, block_n=block_n,
+                block_t=block_t)
+        # multiple groups: binarize once and reuse the grouped
+        # index+gather loop (same rationale as DepthGroupedLayout —
+        # per-group fusion would re-binarize x against every border
+        # once per group)
+        bins = ops.binarize_prepadded(x, self.borders, backend=backend)
+        return self.leaf_sum(bins, backend=backend, block_t=block_t)
+
+    def leaf_table_bytes(self) -> int:
+        return sum(int(np.prod(g.leaf_values.shape)) * 4
+                   for g in self.groups)
+
+    def plane_bytes(self) -> int:
+        """Bytes held by the split bit planes (both arrays, all groups)."""
+        return sum(int(np.prod(g.split_features_bp.shape))
+                   * g.split_features_bp.dtype.itemsize
+                   + int(np.prod(g.split_bins_bp.shape))
+                   * g.split_bins_bp.dtype.itemsize
+                   for g in self.groups)
+
+    def pool_row_bytes(self) -> tuple[int, int]:
+        """(uint8 bytes, u1-plane bytes) one quantized pool row costs.
+
+        The u1 figure — ceil(F/32) uint32 words — is achievable only
+        for binary-split schemas (`binary_split`), where every bin id
+        is 0/1 and `pack_pool_u1` packs the pool losslessly: the 8x
+        pool-memory shrink of the paper's single-border case.
+        """
+        f = max(int(self.n_features), 1)
+        return f, -(-f // 32) * 4
+
+    def describe(self) -> dict[str, Any]:
+        u8, u1 = self.pool_row_bytes()
+        return {"layout": self.layout_name,
+                "leaf_table_bytes": self.leaf_table_bytes(),
+                "plane_bytes": self.plane_bytes(),
+                "groups": {int(g.depth): int(g.n_trees)
+                           for g in self.groups},
+                "binary_split": self.binary_split,
+                "pool_row_bytes_u8": u8,
+                "pool_row_bytes_u1": u1,
+                "pool_shrink_x": (u8 / u1) if self.binary_split else 1.0}
+
+
+def pack_pool_u1(bins: jax.Array) -> jax.Array:
+    """Pack a binary-split quantized pool (N, F) of 0/1 bins into u1
+    feature planes -> (N, ceil(F/32)) uint32.
+
+    Only valid when every bin id is 0 or 1 (<= 1 border per feature —
+    `BitpackedLayout.binary_split`); ragged feature tails are
+    zero-padded lanes.  One row shrinks from F bytes to ceil(F/32)
+    words: the paper's 8x pool-memory reduction for binary splits.
+    """
+    from repro.kernels import ref
+    return jnp.transpose(ref.pack_bits(jnp.transpose(bins)))
+
+
+def unpack_pool_u1(planes: jax.Array, n_features: int) -> jax.Array:
+    """Inverse of `pack_pool_u1` -> (N, n_features) int32 bins."""
+    from repro.kernels import ref
+    return jnp.transpose(ref.unpack_bits(jnp.transpose(planes), n_features))
+
+
 _register_lowered(SoaLayout,
                   ("borders", "split_features", "split_bins",
                    "leaf_values", "tree_blocks"),
@@ -246,9 +367,17 @@ _register_lowered(DepthGroup,
 _register_lowered(DepthGroupedLayout,
                   ("borders", "groups"),
                   ("n_outputs", "n_model_pads"))
+_register_lowered(BitpackedGroup,
+                  ("split_features_bp", "split_bins_bp", "leaf_values"),
+                  ("depth",))
+_register_lowered(BitpackedLayout,
+                  ("borders", "groups"),
+                  ("n_outputs", "n_model_pads", "binary_split",
+                   "n_features"))
 
 # The union type plans hold.
-LoweredEnsemble = SoaLayout | DepthMajorLayout | DepthGroupedLayout
+LoweredEnsemble = (SoaLayout | DepthMajorLayout | DepthGroupedLayout
+                   | BitpackedLayout)
 
 
 # --------------------------------------------------------------------------
@@ -285,6 +414,16 @@ LAYOUTS: dict[str, LayoutSpec] = {
                      "fused_predict"),
         memory="sum_d T_d x 2^d x C leaf tables (< soa when depths mix)",
         when="mixed true depths with enough shallow-tree savings"),
+    "bitpacked": LayoutSpec(
+        name="bitpacked", cls=BitpackedLayout,
+        paper_analog="word-packed comparison loop (vmsgeu mask word + "
+                     "integer shift/or index assembly)",
+        claimed_ops=("binarize", "leaf_index", "leaf_gather",
+                     "fused_predict"),
+        memory="grouped leaf tables + 2 x (d, T_d) integer bit planes; "
+               "u1 pool planes when binary-split",
+        when="mixed depths whose one-hot/f32 working set blows the "
+             "VMEM budget"),
 }
 
 LAYOUT_NAMES = tuple(LAYOUTS)
@@ -335,6 +474,8 @@ def lower(ensemble, layout: str = "soa", *, backend: str = "ref",
         return _lower_soa(ensemble, ctx, tree_block)
     if layout == "depth_major":
         return _lower_depth_major(ensemble, ctx)
+    if layout == "bitpacked":
+        return _lower_bitpacked(ensemble, ctx)
     return _lower_depth_grouped(ensemble, ctx)
 
 
@@ -434,3 +575,42 @@ def _lower_depth_grouped(ensemble, ctx: _LowerCtx) -> DepthGroupedLayout:
     return DepthGroupedLayout(borders, tuple(groups),
                               n_outputs=ensemble.n_outputs,
                               n_model_pads=ctx.n_pads)
+
+
+def _lower_bitpacked(ensemble, ctx: _LowerCtx) -> BitpackedLayout:
+    if not is_concrete(ensemble):
+        raise ValueError(
+            "bitpacked lowering reads split_bins to bucket trees and "
+            "narrow threshold planes; the ensemble holds tracers "
+            "(per-shard plans inside shard_map must lower to 'soa')")
+    borders = ctx.pad_borders(ensemble.borders)
+    # Same depth bucketing as depth_grouped (depth-0 trees clamp to one
+    # always-left level), then each group's split arrays transpose to
+    # (d, Tg_p) bit-plane order.  Threshold planes narrow to uint8 when
+    # every value fits — comparing uint8 bins against a uint8 plane
+    # never widens the gathered panel — but pallas lowering pads trees
+    # with PAD_SPLIT_BIN (2^30), which only int32 can hold.
+    depths = np.maximum(np.asarray(ensemble.true_depths), 1)
+    sf = np.asarray(ensemble.split_features)
+    sb = np.asarray(ensemble.split_bins)
+    lv = np.asarray(ensemble.leaf_values)
+    groups = []
+    for d in sorted(set(int(v) for v in depths)):
+        rows = np.flatnonzero(depths == d)
+        gsf_np = sf[rows][:, :d]
+        gsb_np = sb[rows][:, :d]
+        narrow = not ctx.pallas and gsb_np.size and gsb_np.max() <= 255 \
+            and gsb_np.min() >= 0
+        gsf, gsb, glv = ctx.pad_trees(jnp.asarray(gsf_np),
+                                      jnp.asarray(gsb_np),
+                                      jnp.asarray(lv[rows][:, :1 << d]))
+        gsb_bp = jnp.transpose(gsb)
+        if narrow:
+            gsb_bp = gsb_bp.astype(jnp.uint8)
+        groups.append(BitpackedGroup(d, jnp.transpose(gsf), gsb_bp, glv))
+    n_borders = np.asarray(ensemble.n_borders)
+    return BitpackedLayout(borders, tuple(groups),
+                           n_outputs=ensemble.n_outputs,
+                           n_model_pads=ctx.n_pads,
+                           binary_split=bool((n_borders <= 1).all()),
+                           n_features=int(ensemble.borders.shape[1]))

@@ -89,8 +89,8 @@ class PredictConfig:
                  block contracts
       layout     physical model layout the plan lowers to (see
                  `repro.core.layout`): soa | depth_major |
-                 depth_grouped; auto picks from the ensemble's depth
-                 histogram / leaf-table bytes via
+                 depth_grouped | bitpacked; auto picks from the
+                 ensemble's depth histogram / leaf-table bytes via
                  `kernels.tuning.best_layout`
       tree_block staged-path tree blocking (CalcTreesBlockedImpl); 0 = off
                  (soa layout only — an auto layout resolves to soa when

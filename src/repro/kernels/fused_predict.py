@@ -221,3 +221,111 @@ def fused_predict_dm(x: jax.Array, borders: jax.Array, onehot: jax.Array,
         scratch_shapes=[pltpu.VMEM((block_n, F), bins_scratch_dtype)],
         interpret=interpret,
     )(x, borders, onehot, split_bins_dm, pow2, leaf_values)
+
+
+def _fused_bp_kernel(x_ref, borders_ref, sf_ref, sb_ref, lv_ref, out_ref,
+                     bins_scratch, *, n_borders: int):
+    t_blk = pl.program_id(1)
+
+    # ---- Stage 1: binarize (identical to the soa kernel) ----
+    @pl.when(t_blk == 0)
+    def _binarize():
+        x = x_ref[...]                               # (bn, F)
+        borders = borders_ref[...]                   # (B, F)
+
+        def body(b, acc):
+            row = jax.lax.dynamic_index_in_dim(borders, b, axis=0,
+                                               keepdims=True)
+            return acc + (x > row).astype(jnp.int32)
+
+        bins_scratch[...] = jax.lax.fori_loop(
+            0, n_borders, body,
+            jnp.zeros(x.shape, jnp.int32)).astype(bins_scratch.dtype)
+
+    bins = bins_scratch[...].astype(jnp.int32)       # (bn, F) — stays integer
+    sf = sf_ref[...]                                 # (D, bt) int32
+    sb = sb_ref[...]                                 # (D, bt) int32
+    lv = lv_ref[...]                                 # (bt, L, C)
+    D, bt = sf.shape
+    bn = bins.shape[0]
+    _, L, C = lv.shape
+
+    # ---- Stage 2: leaf index via bitpacked shift/or (no MXU) ----
+    # Per depth the comparison is one bit per doc; 32-doc columns pack
+    # into uint32 lane words and the index register accumulates bit d
+    # with shift/or — integers end to end, no one-hot materialization.
+    w = bn // 32
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 32, bt), 1)
+    idx = jnp.zeros((bn, bt), jnp.int32)
+    for d in range(D):                               # static unroll over depth
+        cols = jnp.take(bins, sf[d], axis=1)         # (bn, bt) integer gather
+        bit = (cols >= sb[d][None, :]).astype(jnp.uint32)
+        words = jnp.sum(bit.reshape(w, 32, bt) << shifts, axis=1,
+                        dtype=jnp.uint32)            # (w, bt) lane words
+        plane = ((words[:, None, :] >> shifts) & jnp.uint32(1)
+                 ).reshape(bn, bt).astype(jnp.int32)
+        idx = idx | (plane << d)
+
+    # ---- Stage 3: leaf accumulate (one-hot matmul, as in soa) ----
+    # Gathering leaf values is the one stage where the MXU one-hot
+    # earns its keep; the bitpacked win is confined to index assembly.
+    leaf_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, bt, L), 2)
+    onehot_l = (leaf_iota == idx[:, :, None]).astype(jnp.float32)
+    acc = jax.lax.dot(onehot_l.reshape(bn, bt * L), lv.reshape(bt * L, C),
+                      preferred_element_type=jnp.float32)        # (bn, C)
+
+    @pl.when(t_blk == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(t_blk != 0)
+    def _accum():
+        out_ref[...] += acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_t", "interpret",
+                                    "bins_scratch_dtype"))
+def fused_predict_bp(x: jax.Array, borders: jax.Array,
+                     split_features_bp: jax.Array, split_bins_bp: jax.Array,
+                     leaf_values: jax.Array, *,
+                     block_n: int = 128, block_t: int = 16,
+                     interpret: bool = False,
+                     bins_scratch_dtype=jnp.int32) -> jax.Array:
+    """Fused GBDT predict over the bitpacked lowered layout -> (N, C).
+
+    Same contract as `fused_predict` with the model side replaced by
+    the `BitpackedLayout` bit-plane arrays: `split_features_bp` /
+    `split_bins_bp`, both (D, T).  N and T must be pre-padded to the
+    block multiples and block_n must be a multiple of 32 (whole uint32
+    doc lanes).
+    """
+    N, F = x.shape
+    B = borders.shape[0]
+    D, T = split_features_bp.shape
+    _, L, C = leaf_values.shape
+    if N % block_n or T % block_t:
+        raise ValueError(
+            f"fused_predict_bp requires padded inputs: N={N} % block_n="
+            f"{block_n} and T={T} % block_t={block_t} must be 0 "
+            "(lowering pads the model; use the plan API)")
+    if block_n % 32:
+        raise ValueError(f"fused_predict_bp packs 32-doc uint32 lanes: "
+                         f"block_n={block_n} must be a multiple of 32")
+    grid = (N // block_n, T // block_t)
+    return pl.pallas_call(
+        functools.partial(_fused_bp_kernel, n_borders=B),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, F), lambda i, j: (i, 0)),
+            pl.BlockSpec((B, F), lambda i, j: (0, 0)),
+            pl.BlockSpec((D, block_t), lambda i, j: (0, j)),
+            pl.BlockSpec((D, block_t), lambda i, j: (0, j)),
+            pl.BlockSpec((block_t, L, C), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, C), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, C), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_n, F), bins_scratch_dtype)],
+        interpret=interpret,
+    )(x, borders, split_features_bp.astype(jnp.int32),
+      split_bins_bp.astype(jnp.int32), leaf_values)

@@ -134,6 +134,75 @@ def leaf_index_dm(bins: jax.Array, onehot: jax.Array, split_bins_dm: jax.Array,
     )(bins, onehot, split_bins_dm, pow2)
 
 
+def _leaf_index_bp_kernel(bins_ref, sf_ref, sb_ref, out_ref):
+    # Bitpacked lowered layout: integer-only pipeline, the closest TPU
+    # analog of the paper's RVV loop.  Per depth d the comparison
+    # bins[n, sf[d, t]] >= sb[d, t] is ONE bit per doc; a 32-doc column
+    # packs into a uint32 lane word (the vmsgeu mask register) and the
+    # leaf-index register accumulates bit d via shift/or.  No MXU, no
+    # one-hot materialization, no float arithmetic anywhere.
+    bins = bins_ref[...].astype(jnp.int32)            # (bn, F)
+    sf = sf_ref[...]                                  # (D, bt) int32
+    sb = sb_ref[...]                                  # (D, bt) int32
+    D, bt = sf.shape
+    bn = bins.shape[0]
+    w = bn // 32
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 32, bt), 1)
+    idx = jnp.zeros((bn, bt), jnp.int32)
+    for d in range(D):                                # static unroll over depth
+        cols = jnp.take(bins, sf[d], axis=1)          # (bn, bt) integer gather
+        bit = (cols >= sb[d][None, :]).astype(jnp.uint32)
+        # pack 32-doc lanes into uint32 words: bits are disjoint per
+        # lane position, so the shifted sum IS the bitwise OR
+        words = jnp.sum(bit.reshape(w, 32, bt) << shifts, axis=1,
+                        dtype=jnp.uint32)             # (w, bt) lane words
+        plane = ((words[:, None, :] >> shifts) & jnp.uint32(1)
+                 ).reshape(bn, bt).astype(jnp.int32)
+        idx = idx | (plane << d)
+    out_ref[...] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_t",
+                                             "interpret"))
+def leaf_index_bp(bins: jax.Array, split_features_bp: jax.Array,
+                  split_bins_bp: jax.Array, *, block_n: int = 256,
+                  block_t: int = 16, interpret: bool = False) -> jax.Array:
+    """Bitpacked `leaf_index`: integer shift/or index assembly -> (N, T) int32.
+
+    Inputs are the bitpacked lowered model arrays (see
+    `repro.core.layout.BitpackedLayout`): bit-plane transposed
+    `split_features_bp` / `split_bins_bp`, both (D, T).  Pre-padded:
+    N % block_n == 0 (block_n a multiple of 32 so doc lanes fill whole
+    uint32 words), T % block_t == 0, padded trees carry split_bins >
+    max bin (they pack bit 0 at every depth -> leaf 0).  `bins` may be
+    int32 or uint8 — the integer compare serves both streams.
+    """
+    N, F = bins.shape
+    D, T = split_features_bp.shape
+    if N % block_n or T % block_t:
+        raise ValueError(
+            f"leaf_index_bp requires padded inputs: N={N} % block_n="
+            f"{block_n} and T={T} % block_t={block_t} must be 0 "
+            "(lowering pads the model; use the plan API)")
+    if block_n % 32:
+        raise ValueError(f"leaf_index_bp packs 32-doc uint32 lanes: "
+                         f"block_n={block_n} must be a multiple of 32")
+    grid = (N // block_n, T // block_t)
+    return pl.pallas_call(
+        _leaf_index_bp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, F), lambda i, j: (i, 0)),
+            pl.BlockSpec((D, block_t), lambda i, j: (0, j)),
+            pl.BlockSpec((D, block_t), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, T), jnp.int32),
+        interpret=interpret,
+    )(bins, split_features_bp.astype(jnp.int32),
+      split_bins_bp.astype(jnp.int32))
+
+
 def leaf_index_u8(bins: jax.Array, split_features: jax.Array,
                   split_bins: jax.Array, *, block_n: int = 256,
                   block_t: int = 16, interpret: bool = False) -> jax.Array:

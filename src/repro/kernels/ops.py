@@ -116,8 +116,9 @@ def _require_u8_borders(borders: jax.Array) -> None:
 # Layout capability shorthands (see repro.core.layout): ops that read
 # no tree-structure arrays work under every physical layout; soa tree
 # kernels also serve depth_grouped, which evaluates group-by-group
-# through them.
-ALL_LAYOUTS = ("soa", "depth_major", "depth_grouped")
+# through them.  bitpacked has its own `_bp` structure kernels, so soa
+# tree kernels do NOT claim it.
+ALL_LAYOUTS = ("soa", "depth_major", "depth_grouped", "bitpacked")
 SOA_LAYOUTS = ("soa", "depth_grouped")
 
 
@@ -265,6 +266,37 @@ def _leaf_index_pallas_dm(bins, onehot, sb_dm, pow2, *, block_n=256,
     out = _index_k.leaf_index_dm(binsp, onehot, sb_dm, pow2,
                                  block_n=block_n, block_t=block_t,
                                  interpret=_interpret())
+    return out[:N]
+
+
+# Bitpacked layout variants: consume the bit-plane transposed
+# (split_features_bp, split_bins_bp) arrays, both (D, T).  Integer-only
+# index assembly — no one-hot, no MXU (see kernels/leaf_index.py).
+@registry.register("leaf_index", "ref_bp", dtypes=("int32", "uint8"),
+                   layouts=("bitpacked",),
+                   constraints="bitpacked bit-plane lowered model; any "
+                               "shape; integer-only shift/or assembly")
+def _leaf_index_ref_bp(bins, sf_bp, sb_bp, *, prepadded=False, **_blocks):
+    return _ref.leaf_index_bitpacked(bins, sf_bp, sb_bp)
+
+
+@registry.register("leaf_index", "pallas_bp", dtypes=("int32", "uint8"),
+                   layouts=("bitpacked",),
+                   constraints="bitpacked lowered model (T pre-padded at "
+                               "lower time); pads N per call; packs 32-doc "
+                               "uint32 lanes, block_n % 32 == 0")
+def _leaf_index_pallas_bp(bins, sf_bp, sb_bp, *, block_n=256, block_t=16,
+                          prepadded=False):
+    T = sf_bp.shape[1]
+    if T % block_t:
+        # direct registry dispatch may hand an unpadded T; plans always
+        # lower the model pre-padded to the block multiple
+        block_t = next(bt for bt in (64, 32, 16, 8, 4, 2, 1) if T % bt == 0)
+    N = bins.shape[0]
+    Np = _round_up(max(N, 1), block_n)
+    binsp = _pad_dim(bins, 0, Np)
+    out = _index_k.leaf_index_bp(binsp, sf_bp, sb_bp, block_n=block_n,
+                                 block_t=block_t, interpret=_interpret())
     return out[:N]
 
 
@@ -424,6 +456,47 @@ def _fused_pallas_dm(x, borders, onehot, sb_dm, pow2, lv, *,
     Np = _round_up(max(N, 1), block_n)
     xp = _pad_dim(_pad_dim(x, 0, Np), 1, borders.shape[1])
     out = _fused_k.fused_predict_dm(xp, borders, onehot, sb_dm, pow2, lv,
+                                    block_n=block_n, block_t=block_t,
+                                    interpret=_interpret(),
+                                    bins_scratch_dtype=scratch)
+    return out[:N]
+
+
+@registry.register("fused_predict", "ref_bp", dtypes=("int32",),
+                   layouts=("bitpacked",),
+                   constraints="bitpacked lowered model; any shape")
+def _fused_ref_bp(x, borders, sf_bp, sb_bp, lv, *, prepadded=False,
+                  **_blocks):
+    if prepadded:
+        x = _pad_dim(x, 1, borders.shape[1])
+    return _ref.fused_predict_bitpacked(x, borders, sf_bp, sb_bp, lv)
+
+
+@registry.register("fused_predict", "pallas_bp", dtypes=("int32", "uint8"),
+                   layouts=("bitpacked",),
+                   constraints="bitpacked lowered model (T pre-padded at "
+                               "lower time); pads N per call; u8 bins "
+                               "scratch when <= 255 borders")
+def _fused_pallas_bp(x, borders, sf_bp, sb_bp, lv, *, block_n=None,
+                     block_t=None, prepadded=False):
+    scratch = (jnp.uint8 if borders.shape[0] <= MAX_U8_BORDERS
+               else jnp.int32)
+    D, T = sf_bp.shape
+    if block_n is None or block_t is None:
+        # same autotune fallback as the dm impl: the model side is
+        # lowered, so block_t must divide the pre-padded T
+        _, L, C = lv.shape
+        tn, tt = _tuning.best_fused_blocks(
+            borders.shape[1], D, L, C, borders.shape[0], n_rows=x.shape[0],
+            n_trees=T)
+        block_n = block_n or tn
+        if block_t is None:
+            block_t = next(bt for bt in (tt, 64, 32, 16, 8, 4, 2, 1)
+                           if T % bt == 0)
+    N = x.shape[0]
+    Np = _round_up(max(N, 1), block_n)
+    xp = _pad_dim(_pad_dim(x, 0, Np), 1, borders.shape[1])
+    out = _fused_k.fused_predict_bp(xp, borders, sf_bp, sb_bp, lv,
                                     block_n=block_n, block_t=block_t,
                                     interpret=_interpret(),
                                     bins_scratch_dtype=scratch)
@@ -614,5 +687,41 @@ def fused_predict_dm_prepadded(x: jax.Array, borders: jax.Array,
     return registry.dispatch("fused_predict", backend, x, borders, onehot,
                              split_bins_dm, pow2, leaf_values,
                              layout="depth_major",
+                             block_n=block_n, block_t=block_t,
+                             prepadded=True)
+
+
+# --------------------------------------------------------------------------
+# Bitpacked layout entry points (lowered-model hot loop)
+# --------------------------------------------------------------------------
+# These take the `BitpackedLayout` bit-plane arrays `layout.lower`
+# produced — (D, T) transposed split features/thresholds — so index
+# assembly runs as integer shift/or with no one-hot anywhere.  The
+# model side is always lowered pre-padded; data is padded per call.
+
+def leaf_index_bp_prepadded(bins: jax.Array, split_features_bp: jax.Array,
+                            split_bins_bp: jax.Array, *,
+                            backend: Backend = "auto", block_n: int = 256,
+                            block_t: int = 16) -> jax.Array:
+    """Leaf indices from a bitpacked lowered model -> (N, Tp) int32.
+    Accepts int32 or uint8 bins (quantized-pool scoring)."""
+    return registry.dispatch("leaf_index", backend, bins, split_features_bp,
+                             split_bins_bp, dtype=_bins_dtype(bins),
+                             layout="bitpacked",
+                             block_n=block_n, block_t=block_t,
+                             prepadded=True)
+
+
+def fused_predict_bp_prepadded(x: jax.Array, borders: jax.Array,
+                               split_features_bp: jax.Array,
+                               split_bins_bp: jax.Array,
+                               leaf_values: jax.Array, *,
+                               backend: Backend = "auto",
+                               block_n: int = 128,
+                               block_t: int = 16) -> jax.Array:
+    """Fused predict on a bitpacked lowered model -> (N, C) f32."""
+    return registry.dispatch("fused_predict", backend, x, borders,
+                             split_features_bp, split_bins_bp, leaf_values,
+                             layout="bitpacked",
                              block_n=block_n, block_t=block_t,
                              prepadded=True)

@@ -97,6 +97,64 @@ def leaf_index_depth_major(bins: jax.Array, onehot: jax.Array,
                    axis=-1).astype(jnp.int32)
 
 
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a 0/1 plane along axis 0 into uint32 lanes -> (ceil(N/32), ...).
+
+    The paper's word-packing: 32 docs' comparison bits become one
+    machine word (RVV's `vmsgeu` mask register, LMUL'd into words).
+    Ragged tails are zero-padded, so lane bit k of word w is doc
+    `32*w + k` and every bit past N is 0.  Bits are disjoint across
+    lane positions, so the sum of shifted bits equals their bitwise OR.
+    """
+    n = bits.shape[0]
+    w = -(-max(n, 1) // 32)
+    b = jnp.asarray(bits).astype(jnp.uint32)
+    pad = [(0, w * 32 - n)] + [(0, 0)] * (b.ndim - 1)
+    b = jnp.pad(b, pad).reshape((w, 32) + b.shape[1:])
+    shifts = jnp.arange(32, dtype=jnp.uint32).reshape(
+        (1, 32) + (1,) * (b.ndim - 2))
+    return jnp.sum(b << shifts, axis=1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, n: int) -> jax.Array:
+    """Inverse of `pack_bits`: uint32 lanes -> the first `n` 0/1 rows (int32)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32).reshape(
+        (1, 32) + (1,) * (words.ndim - 1))
+    bits = (words[:, None] >> shifts) & jnp.uint32(1)
+    out = bits.reshape((words.shape[0] * 32,) + words.shape[1:])
+    return out[:n].astype(jnp.int32)
+
+
+def leaf_index_bitpacked(bins: jax.Array, split_features_bp: jax.Array,
+                         split_bins_bp: jax.Array, *,
+                         via_words: bool = False) -> jax.Array:
+    """`leaf_index` over the bitpacked lowered layout -> (N, T) int32.
+
+    Consumes the bit-plane transposed model arrays of
+    `layout.lower(..., "bitpacked")`: `split_features_bp` (D, T) int32
+    and `split_bins_bp` (D, T) in the narrowest dtype that holds the
+    thresholds (uint8 when they fit — comparing uint8 bins against a
+    uint8 plane never widens the gathered panel).  Depth d's comparison
+    result is a single bit per doc; the index register accumulates bit
+    d via shift/or on integers — no one-hot, no float arithmetic, no
+    MXU.  `via_words=True` additionally routes each depth's comparison
+    plane through `pack_bits`/`unpack_bits` (the paper-literal 32-doc
+    uint32 lane representation); since pack/unpack is the identity on
+    bit planes (property-tested), both paths are equal by construction.
+    """
+    D, T = split_features_bp.shape
+    n = bins.shape[0]
+    gathered = bins[:, split_features_bp.reshape(-1)].reshape(n, D, T)
+    go = gathered >= split_bins_bp[None, :, :]              # bool (N, D, T)
+    idx = jnp.zeros((n, T), jnp.int32)
+    for d in range(D):                                      # static unroll
+        bit = go[:, d, :]
+        if via_words:
+            bit = unpack_bits(pack_bits(bit), n)
+        idx = idx | (bit.astype(jnp.int32) << d)
+    return idx
+
+
 def leaf_gather(idx: jax.Array, leaf_values: jax.Array) -> jax.Array:
     """pred[n, c] = sum_t leaf_values[t, idx[n, t], c]  -> (N, C) float32."""
     N, T = idx.shape
@@ -138,4 +196,14 @@ def fused_predict_depth_major(x: jax.Array, borders: jax.Array,
     """`fused_predict` over the depth-major lowered layout -> (N, C)."""
     bins = binarize(x, borders)
     idx = leaf_index_depth_major(bins, onehot, split_bins_dm, pow2)
+    return leaf_gather(idx, leaf_values)
+
+
+def fused_predict_bitpacked(x: jax.Array, borders: jax.Array,
+                            split_features_bp: jax.Array,
+                            split_bins_bp: jax.Array,
+                            leaf_values: jax.Array) -> jax.Array:
+    """`fused_predict` over the bitpacked lowered layout -> (N, C)."""
+    bins = binarize(x, borders)
+    idx = leaf_index_bitpacked(bins, split_features_bp, split_bins_bp)
     return leaf_gather(idx, leaf_values)

@@ -143,7 +143,7 @@ def known_backends() -> tuple[str, ...]:
 
 # Layout -> implementation-name suffix tried when the backend's base
 # implementation does not consume that layout's arrays.
-_LAYOUT_SUFFIX = {"depth_major": "dm"}
+_LAYOUT_SUFFIX = {"depth_major": "dm", "bitpacked": "bp"}
 
 
 def resolve(op: str, backend: str = "auto", *,

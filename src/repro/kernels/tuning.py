@@ -205,9 +205,14 @@ def layout_costs(true_depths, n_outputs: int, n_features: int
     soa_leaf = int(d.size) * (1 << dmax) * n_outputs * 4
     grouped_leaf = int(((1 << np.maximum(d, 1)) * n_outputs * 4).sum())
     onehot = int(d.size) * dmax * n_features * 4
+    # bitpacked shares depth_grouped's leaf tables; its extra state is
+    # two (d, T_d) integer bit planes per group — int32 worst case
+    plane = int((2 * np.maximum(d, 1) * 4).sum())
     return {"soa_leaf_bytes": soa_leaf,
             "depth_grouped_leaf_bytes": grouped_leaf,
-            "depth_major_onehot_bytes": onehot}
+            "depth_major_onehot_bytes": onehot,
+            "bitpacked_leaf_bytes": grouped_leaf,
+            "bitpacked_plane_bytes": plane}
 
 
 def best_layout(true_depths, n_outputs: int, n_features: int, *,
@@ -217,6 +222,12 @@ def best_layout(true_depths, n_outputs: int, n_features: int, *,
     tree count, the leaf-table bytes each layout would carry, and the
     kernel family that will consume it.
 
+      bitpacked      mixed depths with grouped savings whose one-hot /
+                     f32 working set (the (T, Dmax, F) gather panel an
+                     MXU-family index kernel would stream) blows the
+                     VMEM budget — the integer bit-plane pipeline
+                     carries no one-hot at all, so its working set is
+                     the grouped leaf tables plus two thin planes
       depth_grouped  when true depths mix and the per-depth leaf tables
                      save >= GROUPED_MIN_SAVINGS of the soa table
                      (less index+gather work on any backend)
@@ -239,6 +250,8 @@ def best_layout(true_depths, n_outputs: int, n_features: int, *,
         savings = 1.0 - (costs["depth_grouped_leaf_bytes"]
                          / max(costs["soa_leaf_bytes"], 1))
         if savings >= GROUPED_MIN_SAVINGS:
+            if costs["depth_major_onehot_bytes"] > VMEM_BUDGET:
+                return "bitpacked"
             return "depth_grouped"
     if backend.startswith("pallas") and \
             costs["depth_major_onehot_bytes"] <= DEPTH_MAJOR_MAX_ONEHOT_BYTES:

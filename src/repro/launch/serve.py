@@ -105,7 +105,8 @@ def main():
     ap.add_argument("--backend", choices=["auto", "pallas", "ref"],
                     default="auto")
     ap.add_argument("--layout", default="auto",
-                    choices=["auto", "soa", "depth_major", "depth_grouped"],
+                    choices=["auto", "soa", "depth_major", "depth_grouped",
+                             "bitpacked"],
                     help="physical model layout the plan lowers to "
                          "(auto = picked from the ensemble's depth "
                          "histogram by kernels.tuning.best_layout)")
@@ -139,8 +140,13 @@ def main():
                                          backend=backend)
             mixed = tuning.best_layout(np.tile([2, 3, 4, 6], 25), 1, 54,
                                        backend=backend)
+            # a mixed-depth model too large for the f32 one-hot working
+            # set (> VMEM budget) routes to the integer bitpacked layout
+            huge = tuning.best_layout(np.tile([4, 6, 8, 10], 50_000), 1,
+                                      512, backend=backend)
             print(f"\nresolved layout (auto, {backend} backend): "
-                  f"uniform-depth -> {uniform}, mixed-depth -> {mixed}")
+                  f"uniform-depth -> {uniform}, mixed-depth -> {mixed}, "
+                  f"huge-mixed -> {huge}")
         return
     (serve_gbdt if args.mode == "gbdt" else serve_lm)(args)
 

@@ -1,0 +1,154 @@
+"""Bitpacked layout: the tail-block bug class.
+
+32 docs share one uint32 lane word, so the two classic failure modes
+are (a) batches whose tail block is partially real (n % 32 != 0) and
+(b) padded lane bits leaking into a group's 2^d leaf table at its top
+index.  Plus the binary-split u1 pool planes (8x shrink) and the
+routing that makes `best_layout` pick the layout at all.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import layout as layout_mod
+from repro.core.layout import pack_pool_u1, unpack_pool_u1
+from repro.core.predictor import PredictConfig, Predictor
+from repro.core.trees import ObliviousEnsemble, truncate_tree_depths
+from repro.kernels import ops, ref, tuning
+
+
+def _ensemble(seed=7, n_trees=12, depth=4, n_features=11, n_borders=9,
+              n_outputs=2, mixed=True):
+    rng = np.random.default_rng(seed)
+    borders = jnp.asarray(
+        np.sort(rng.normal(size=(n_borders, n_features)), 0)
+        .astype(np.float32))
+    sf = jnp.asarray(rng.integers(0, n_features,
+                                  (n_trees, depth)).astype(np.int32))
+    sb = jnp.asarray(rng.integers(1, n_borders + 1,
+                                  (n_trees, depth)).astype(np.int32))
+    lv = jnp.asarray(rng.normal(size=(n_trees, 2 ** depth, n_outputs))
+                     .astype(np.float32))
+    ens = ObliviousEnsemble(sf, sb, lv, borders,
+                            jnp.full((n_features,), n_borders, jnp.int32))
+    if mixed:
+        ens = truncate_tree_depths(
+            ens, [(1, 2, 3, 4)[t % 4] for t in range(n_trees)])
+    return ens
+
+
+def _want(ens, x):
+    return np.asarray(ens.base_score)[None, :] + np.asarray(
+        ref.fused_predict(x, ens.borders, ens.split_features,
+                          ens.split_bins, ens.leaf_values))
+
+
+# --------------------------------------------------------------------------
+# (a) ragged tail blocks: n % 32 != 0
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 31, 33, 63, 97])
+@pytest.mark.parametrize("strategy", ["staged", "fused"])
+def test_tail_block_exact(n, strategy):
+    """Bitpacked pallas scoring is exact for every ragged batch size —
+    the padded docs of the last lane word must not leak."""
+    ens = _ensemble()
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n, ens.n_features))
+                    .astype(np.float32))
+    plan = Predictor.build(ens, PredictConfig(
+        strategy=strategy, backend="pallas", layout="bitpacked"),
+        expected_batch=n)
+    np.testing.assert_allclose(np.asarray(plan.raw(x)), _want(ens, x),
+                               rtol=1e-5, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# (b) padded lane bits vs the 2^d leaf table's top index
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_full_lane_against_top_leaf(backend):
+    """Every real doc routes to leaf 2^d - 1 (all comparison bits set)
+    while the lane word's padded docs must stay at leaf 0: the padded
+    half of the word and the top of the leaf table meet in one uint32."""
+    ens = _ensemble(mixed=False)           # one group, depth 4
+    d = ens.depth
+    rng = np.random.default_rng(0)
+    n = 33                                 # 2 lane words, 31 padded docs
+    # x above every border -> bins == n_borders >= every split_bin
+    x = jnp.asarray(np.abs(rng.normal(size=(n, ens.n_features)))
+                    .astype(np.float32) + 100.0)
+    plan = Predictor.build(ens, PredictConfig(
+        strategy="staged", backend=backend, layout="bitpacked"),
+        expected_batch=n)
+    top = np.asarray(ens.base_score)[None, :] + np.asarray(
+        ens.leaf_values[:, 2 ** d - 1, :]).sum(0)[None, :]
+    np.testing.assert_allclose(np.asarray(plan.raw(x)),
+                               np.broadcast_to(top, (n, ens.n_outputs)),
+                               rtol=1e-5, atol=1e-4)
+    # and the indexes themselves are bit-exact at the table's top slot
+    bins = ref.binarize(x, ens.borders)
+    idx = ops.leaf_index_bp_prepadded(
+        bins, jnp.transpose(ens.split_features),
+        jnp.transpose(ens.split_bins), backend=backend, block_t=1)
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.full((n, ens.n_trees), 2 ** d - 1))
+
+
+def test_bitpacked_ref_leaf_indexes_bit_exact_vs_soa():
+    """Acceptance pin: bitpacked leaf indexes == soa leaf indexes,
+    exactly, on the ref backend (integers, no tolerance)."""
+    ens = _ensemble()
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(37, ens.n_features))
+                    .astype(np.float32))
+    bins = ref.binarize(x, ens.borders)
+    want = ref.leaf_index(bins, ens.split_features, ens.split_bins)
+    got = ref.leaf_index_bitpacked(bins,
+                                   jnp.transpose(ens.split_features),
+                                   jnp.transpose(ens.split_bins))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# binary-split schemas: u1 pool planes, the 8x pool-memory shrink
+# --------------------------------------------------------------------------
+def test_u1_pool_planes_roundtrip_and_score():
+    ens = _ensemble(n_features=64, n_borders=1)    # binary splits
+    lowered = layout_mod.lower(ens, "bitpacked", backend="ref")
+    desc = lowered.describe()
+    assert desc["binary_split"]
+    assert desc["pool_row_bytes_u8"] == 64
+    assert desc["pool_row_bytes_u1"] == 8          # 2 uint32 words
+    assert desc["pool_shrink_x"] == 8.0
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(45, 64)).astype(np.float32))
+    plan = Predictor.build(ens, PredictConfig(
+        strategy="staged", backend="ref", layout="bitpacked"))
+    pool = plan.quantize(x)
+    planes = pack_pool_u1(pool.bins)
+    assert planes.shape == (45, 2) and planes.dtype == jnp.uint32
+    back = unpack_pool_u1(planes, 64)
+    np.testing.assert_array_equal(np.asarray(back),
+                                  np.asarray(pool.bins))
+    # a pool rebuilt from the u1 planes scores identically to the
+    # float batch — the 8x shrink is lossless for binary splits
+    rebuilt = dataclasses.replace(pool, bins=back.astype(jnp.uint8))
+    np.testing.assert_array_equal(np.asarray(plan.raw(rebuilt)),
+                                  np.asarray(plan.raw(x)))
+
+
+def test_non_binary_schema_reports_no_shrink():
+    lowered = layout_mod.lower(_ensemble(), "bitpacked", backend="ref")
+    desc = lowered.describe()
+    assert not desc["binary_split"]
+    assert desc["pool_shrink_x"] == 1.0
+
+
+def test_best_layout_routes_huge_mixed_to_bitpacked():
+    depths = np.tile([4, 6, 8, 10], 50_000)
+    assert tuning.best_layout(depths, 1, 512) == "bitpacked"
+    # while modest mixed-depth models keep the grouped f32 layout
+    assert tuning.best_layout(np.tile([2, 3, 4, 6], 25), 1,
+                              54) == "depth_grouped"

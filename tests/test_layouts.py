@@ -11,8 +11,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import layout as layout_mod
-from repro.core.layout import (DepthGroupedLayout, DepthMajorLayout,
-                               SoaLayout, lower)
+from repro.core.layout import (BitpackedLayout, DepthGroupedLayout,
+                               DepthMajorLayout, SoaLayout, lower)
 from repro.core.predictor import PredictConfig, Predictor
 from repro.core.trees import (ObliviousEnsemble, PAD_SPLIT_BIN,
                               truncate_tree_depths)
@@ -193,6 +193,14 @@ def test_registry_layout_resolution():
     # uint8 pools route to the shared dm impl (it takes both dtypes)
     assert registry.resolve("leaf_index", "ref", dtype="uint8",
                             layout="depth_major") == "ref_dm"
+    # bitpacked routes via the _bp suffix exactly like _dm
+    assert registry.resolve("leaf_index", "ref",
+                            layout="bitpacked") == "ref_bp"
+    assert registry.resolve("leaf_index", "pallas", dtype="uint8",
+                            layout="bitpacked") == "pallas_bp"
+    assert registry.resolve("fused_predict", "pallas",
+                            layout="bitpacked") == "pallas_bp"
+    assert registry.resolve("binarize", "ref", layout="bitpacked") == "ref"
     with pytest.raises(ValueError, match="does not consume"):
         registry.resolve("leaf_gather", "ref", layout="nope")
 
@@ -227,8 +235,16 @@ def test_best_layout_heuristics():
     assert tuning.best_layout(np.full(200_000, 8), 1, 512,
                               backend="pallas") == "soa"
     assert tuning.best_layout(np.asarray([], np.int64), 1, 54) == "soa"
+    # mixed depths whose f32 one-hot working set blows the VMEM budget
+    # route to the integer bitpacked pipeline (any backend)
+    huge_mixed = np.tile([4, 6, 8, 10], 50_000)
+    assert tuning.best_layout(huge_mixed, 1, 512) == "bitpacked"
+    assert tuning.best_layout(huge_mixed, 1, 512,
+                              backend="pallas") == "bitpacked"
     costs = tuning.layout_costs(mixed, 1, 54)
     assert costs["depth_grouped_leaf_bytes"] < costs["soa_leaf_bytes"]
+    assert costs["bitpacked_leaf_bytes"] == costs["depth_grouped_leaf_bytes"]
+    assert 0 < costs["bitpacked_plane_bytes"] < costs["soa_leaf_bytes"]
 
 
 # --------------------------------------------------------------------------
@@ -302,4 +318,4 @@ def test_lowered_pytree_roundtrip(layout):
     nones = jax.tree_util.tree_map(lambda _: None, low,
                                    is_leaf=lambda v: v is None)
     assert isinstance(nones, (SoaLayout, DepthMajorLayout,
-                              DepthGroupedLayout))
+                              DepthGroupedLayout, BitpackedLayout))

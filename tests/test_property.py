@@ -83,6 +83,41 @@ def test_monotone_feature_shifts_bins_monotonically(n, seed):
     assert np.all(np.diff(bins[:, 0]) >= 0)
 
 
+@given(n=st.integers(1, 100), cols=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_pack_unpack_bits_identity(n, cols, seed):
+    """pack_bits -> unpack_bits is the identity for any (docs, depth)
+    shape, including ragged tails where docs % 32 != 0."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (n, cols)).astype(bool)
+    words = ref.pack_bits(jnp.asarray(bits))
+    assert words.dtype == jnp.uint32
+    assert words.shape == (-(-n // 32), cols)
+    back = np.asarray(ref.unpack_bits(words, n))
+    np.testing.assert_array_equal(back, bits.astype(np.int32))
+
+
+@given(n=st.integers(1, 70), f=st.integers(2, 20), t=st.integers(1, 12),
+       d=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_bitpacked_leaf_index_matches_soa(n, f, t, d, seed):
+    """For any valid ensemble, the bitpacked index assembly (shift/or
+    on integer registers) equals the soa oracle — both directly and
+    when each depth plane round-trips through uint32 lane words."""
+    rng = np.random.default_rng(seed)
+    bins = jnp.asarray(rng.integers(0, 64, (n, f)).astype(np.int32))
+    sf = jnp.asarray(rng.integers(0, f, (t, d)).astype(np.int32))
+    sb = jnp.asarray(rng.integers(0, 65, (t, d)).astype(np.int32))
+    want = np.asarray(ref.leaf_index(bins, sf, sb))
+    sf_bp, sb_bp = jnp.transpose(sf), jnp.transpose(sb)
+    got = np.asarray(ref.leaf_index_bitpacked(bins, sf_bp, sb_bp))
+    np.testing.assert_array_equal(got, want)
+    via = np.asarray(ref.leaf_index_bitpacked(bins, sf_bp, sb_bp,
+                                              via_words=True))
+    np.testing.assert_array_equal(via, want)
+
+
 @given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 6))
 @settings(**COMMON)
 def test_padded_trees_are_noops(seed, d):

@@ -1,0 +1,217 @@
+"""Training benchmark: seed float-path scan vs quantized-first trainer.
+
+Three scenarios over the same dataset and BoostingParams:
+
+  seed-float   `core.boosting.fit_scan` — the pre-PR-7 trainer: one
+               lax.scan over trees, binarizes its own float matrix
+               every fit, segment-sum histograms outside the registry
+  pool         `GBDTTrainer.fit_pool` on a prebuilt uint8
+               `QuantizedPool` — registered histogram kernels, zero
+               binarize dispatches inside boosting
+  streamed     `GBDTTrainer.fit_source` on a `SyntheticSource` —
+               includes the out-of-core quantize passes (borders +
+               chunked binarize), i.e. ingest amortization included
+
+Timing: one warmup fit (compiles), then --rounds measured fits,
+median wall.  `rows_per_s` counts trained sample-rows (N x trees) —
+the same unit TrainingMetrics reports.
+
+``--check`` gates (exit 1 on failure):
+  * pool == float parity to the leaf-value level (identical splits,
+    leaf values within 1e-6) and streamed == pool bit-identical splits
+  * the <= compiled-shapes contract: a warmed pool refit performs ZERO
+    new histogram dispatches
+  * full mode only: pool-path training >= 1.5x the seed float path
+
+Result JSONs land in ``results/perf/training-bench__<scenario>.json``
+(the established perf-trajectory schema); ``--no-write`` keeps CI from
+clobbering the committed trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import pathlib
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import boosting, quantize
+from repro.core.losses import make_loss
+from repro.data import synthetic
+from repro.kernels import registry
+from repro.scoring import sources as sources_lib
+from repro.training.gbdt import GBDTTrainer
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent.parent / "results" / "perf"
+
+
+def eprint(*args) -> None:
+    print(*args, file=sys.stderr)
+
+
+def _write_scenario_json(out_dir: pathlib.Path, name: str, scenario: str,
+                         fields: dict) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "scenario": scenario,
+        "layout": "auto",
+        **fields,
+    }
+    (out_dir / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def _splits_equal(a, b) -> bool:
+    return (np.array_equal(np.asarray(a.split_features),
+                           np.asarray(b.split_features))
+            and np.array_equal(np.asarray(a.split_bins),
+                               np.asarray(b.split_bins)))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless pool==float leaf-value parity "
+                         "holds, warmed refits compile nothing new, "
+                         "and (full mode) pool training >= 1.5x seed")
+    ap.add_argument("--dataset", default="covertype")
+    ap.add_argument("--scale", type=float, default=0.0)
+    ap.add_argument("--trees", type=int, default=0)
+    ap.add_argument("--depth", type=int, default=0)
+    ap.add_argument("--max-bins", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=1024,
+                    help="streamed-scenario chunk rows")
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="measured fits per scenario (0 = mode default)")
+    ap.add_argument("--out-dir", default=str(RESULTS_DIR))
+    ap.add_argument("--no-write", action="store_true")
+    args = ap.parse_args()
+
+    scale = args.scale or (0.005 if args.quick else 0.02)
+    trees = args.trees or (8 if args.quick else 20)
+    depth = args.depth or (4 if args.quick else 6)
+    rounds = args.rounds or (1 if args.quick else 2)
+
+    ds = synthetic.load(args.dataset, scale=scale)
+    loss = make_loss(ds.loss, n_classes=ds.n_classes)
+    params = boosting.BoostingParams(n_trees=trees, depth=depth,
+                                     max_bins=args.max_bins, seed=0)
+    x, y = ds.x_train, ds.y_train
+    rows = int(x.shape[0])
+    eprint(f"# training bench: {args.dataset} scale={scale} "
+           f"rows={rows} trees={trees} depth={depth}")
+
+    borders, n_borders = quantize.compute_borders(
+        np.asarray(x, np.float32), args.max_bins)
+    pool = quantize.quantize_pool(jnp.asarray(x, jnp.float32), borders)
+    source = sources_lib.SyntheticSource(args.dataset, scale=scale,
+                                         split="train", repeat=1)
+
+    def run_seed():
+        return boosting.fit_scan(x, y, loss=loss, params=params)
+
+    def run_pool():
+        tr = GBDTTrainer(loss, params)
+        return tr.fit_pool(pool, y, borders=borders, n_borders=n_borders)
+
+    def run_streamed():
+        tr = GBDTTrainer(loss, params)
+        return tr.fit_source(source, y, chunk_rows=args.chunk)
+
+    runners = [("seed-float", run_seed), ("pool", run_pool),
+               ("streamed", run_streamed)]
+    med: dict[str, float] = {}
+    result: dict[str, tuple] = {}
+    refit_hist_dispatches = 0
+    for name, fn in runners:
+        result[name] = fn()                       # warmup: compiles
+        if name == "pool":
+            before = registry.call_stats().get("histogram", 0)
+        walls = []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            result[name] = fn()
+            walls.append(time.perf_counter() - t0)
+        if name == "pool":
+            refit_hist_dispatches = (registry.call_stats()
+                                     .get("histogram", 0) - before)
+        med[name] = float(np.median(walls))
+
+    rps = {name: rows * trees / med[name] for name, _ in runners}
+    speedup = {name: med["seed-float"] / med[name] for name, _ in runners}
+    ens_f = result["seed-float"][0]
+    ens_p = result["pool"][0]
+    ens_s = result["streamed"][0]
+    splits_ok = _splits_equal(ens_p, ens_f)
+    leaf_err = float(np.max(np.abs(np.asarray(ens_p.leaf_values)
+                                   - np.asarray(ens_f.leaf_values))))
+    streamed_ok = _splits_equal(ens_s, ens_p)
+    dispatch = result["pool"][1]["dispatch_delta"]
+
+    print("scenario,wall_s,rows_per_s,speedup_vs_seed")
+    for name, _ in runners:
+        print(f"training/{name},{med[name]:.3f},{rps[name]:.0f},"
+              f"{speedup[name]:.2f}")
+    eprint(f"# pool==float: splits_equal={splits_ok} "
+           f"leaf_max_abs_err={leaf_err:.2e}; streamed==pool splits: "
+           f"{streamed_ok}; warmed-refit histogram dispatches: "
+           f"{refit_hist_dispatches}")
+
+    if not args.no_write:
+        out_dir = pathlib.Path(args.out_dir)
+        common = {"dataset": args.dataset, "rows": rows, "trees": trees,
+                  "depth": depth, "max_bins": args.max_bins,
+                  "rounds": rounds, "backend": "ref",
+                  "quick": bool(args.quick)}
+        for name, _ in runners:
+            extra = {}
+            if name == "pool":
+                extra = {"splits_equal_vs_seed": splits_ok,
+                         "leaf_max_abs_err_vs_seed": leaf_err,
+                         "boost_binarize_dispatches":
+                             dispatch.get("binarize", 0),
+                         "refit_histogram_dispatches":
+                             refit_hist_dispatches}
+            if name == "streamed":
+                extra = {"splits_equal_vs_pool": streamed_ok,
+                         "chunk_rows": args.chunk}
+            _write_scenario_json(
+                out_dir, f"training-bench__{name}", f"training-{name}",
+                {**common, "wall_s": med[name], "rows_per_s": rps[name],
+                 "speedup_vs_seed": speedup[name], **extra})
+        eprint(f"# wrote result JSONs to {out_dir}")
+
+    if args.check:
+        if not splits_ok or leaf_err > 1e-6:
+            eprint(f"FAIL: pool-path training diverges from the seed "
+                   f"float path (splits_equal={splits_ok}, "
+                   f"leaf_max_abs_err={leaf_err:.2e})")
+            return 1
+        if not streamed_ok:
+            eprint("FAIL: streamed-source training diverges from "
+                   "pool-path training (same rows, same borders)")
+            return 1
+        if dispatch.get("binarize", 0) != 0:
+            eprint(f"FAIL: pool-path boosting dispatched binarize "
+                   f"{dispatch['binarize']}x (expected 0)")
+            return 1
+        if refit_hist_dispatches != 0:
+            eprint(f"FAIL: warmed pool refit performed "
+                   f"{refit_hist_dispatches} new histogram dispatches; "
+                   "the compiled-shape contract is <= depth once")
+            return 1
+        if not args.quick and speedup["pool"] < 1.5:
+            eprint(f"FAIL: pool-path training speedup "
+                   f"{speedup['pool']:.2f}x is below the 1.5x floor")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

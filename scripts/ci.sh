@@ -86,6 +86,21 @@ echo "== scoring benchmark (quick, parity + chunk-shape + throughput gate) =="
 # quick mode).  --no-write keeps the committed results/perf/ JSONs.
 python -m benchmarks.scoring_bench --quick --check --no-write >/dev/null
 
+echo "== train smoke (streamed source -> GBDTTrainer -> exact serve parity) =="
+# --check fails unless serve parity is EXACT (0.0), boosting performed
+# zero binarize dispatches, histogram dispatches stayed <= depth, the
+# source exceeded one chunk (genuinely out-of-core), and the train loss
+# decreased
+python -m repro.launch.train_gbdt --dataset covertype --scale 0.002 \
+    --repeat 2 --trees 6 --depth 3 --chunk 512 --max-bins 32 \
+    --backend ref --check >/dev/null
+
+echo "== training benchmark (quick: seed-float vs pool vs streamed) =="
+# --check fails unless the pool path reproduces the seed float scan to
+# the leaf-value level, streamed == pool, and a warmed pool refit
+# performs zero new histogram dispatches (compiled-shape contract)
+python -m benchmarks.training_bench --quick --check --no-write >/dev/null
+
 echo "== predictor smoke benchmark (prepared / prequantized / registry / layouts) =="
 # --check fails the build if the prepared-plan path is below parity
 # with the kwarg path it replaced, if a quantized scenario

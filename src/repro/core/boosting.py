@@ -13,9 +13,20 @@ Each boosting iteration fits one oblivious tree:
 
   leaf values: w_l = -lr * G_l / (H_l + l2)    (Newton step)
 
-The whole fit is one `lax.scan` over trees -> compiles once, runs fast on
-CPU and TPU.  Feature subsampling (rsm) is supported via per-tree gain
-masking.
+Two trainers share this math:
+
+  * `fit` (the default) is a thin front-end over the quantized-first
+    subsystem in `repro.training.gbdt`: the float matrix is binarized
+    ONCE into a uint8 `QuantizedPool` and boosting runs registered
+    `histogram` kernels over it — zero binarize dispatches inside the
+    loop, per-iteration checkpoint/resume, and the fitted ensemble
+    round-trips through `Predictor.build` exactly.
+  * `fit_scan` is the seed float-path trainer (the whole fit is one
+    `lax.scan` over trees -> compiles once).  Kept as the benchmark
+    baseline and the differential oracle the quantized trainer is
+    tested against.
+
+Feature subsampling (rsm) is supported via per-tree gain masking.
 """
 from __future__ import annotations
 
@@ -170,7 +181,40 @@ def fit(x: np.ndarray, y: np.ndarray, *, loss: losses_lib.Loss,
         borders: Optional[jax.Array] = None,
         n_borders: Optional[jax.Array] = None,
         ) -> tuple[ObliviousEnsemble, dict]:
-    """Train a GBDT on raw float features. Returns (ensemble, history)."""
+    """Train a GBDT on raw float features. Returns (ensemble, history).
+
+    Front-end over `repro.training.gbdt.GBDTTrainer`: quantizes once
+    into a uint8 pool (or int32 bins when the borders exceed the uint8
+    bin space) and boosts on that — same math, same RNG stream and same
+    history semantics as the seed `fit_scan`, but through the
+    registered `histogram` kernels.
+    """
+    # lazy import: training.gbdt imports this module for the shared
+    # boosting math (BoostingParams, _ordered_update, ...)
+    from repro.training import gbdt as gbdt_lib
+
+    x = np.asarray(x, np.float32)
+    if borders is None:
+        borders, n_borders = quantize.compute_borders(x, params.max_bins)
+    trainer = gbdt_lib.GBDTTrainer(loss, params)
+    if int(borders.shape[0]) <= quantize.MAX_BINS - 1:
+        pool = quantize.quantize_pool(jnp.asarray(x), borders)
+        return trainer.fit_pool(pool, y, borders=borders,
+                                n_borders=n_borders)
+    bins = quantize.binarize_matrix(jnp.asarray(x), borders)
+    return trainer.fit_bins(bins, y, borders=borders, n_borders=n_borders)
+
+
+def fit_scan(x: np.ndarray, y: np.ndarray, *, loss: losses_lib.Loss,
+             params: BoostingParams,
+             borders: Optional[jax.Array] = None,
+             n_borders: Optional[jax.Array] = None,
+             ) -> tuple[ObliviousEnsemble, dict]:
+    """The seed float-path trainer: one `lax.scan` over trees.
+
+    Binarizes its own float matrix every fit and scatters histograms
+    through `segment_sum` — kept verbatim as the benchmark baseline and
+    the differential oracle for the quantized-first trainer."""
     x = np.asarray(x, np.float32)
     yj = jnp.asarray(y)
     if borders is None:

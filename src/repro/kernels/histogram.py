@@ -28,16 +28,28 @@ from jax.experimental import pallas as pl
 def _hist_kernel(bins_ref, leaf_ref, g_ref, out_ref, *, n_bins: int,
                  n_leaves: int):
     n_blk = pl.program_id(1)
-    bins = bins_ref[...]                   # (bf, bn) int32 (feature-major)
+    bins = bins_ref[...]                   # (bf, bn) int32|uint8 (feat-major)
     leaf = leaf_ref[...]                   # (1, bn) int32
     g = g_ref[...]                         # (bn, C) f32
     bf, bn = bins.shape
     S = n_leaves * n_bins
 
-    seg = leaf * n_bins + bins                            # (bf, bn)
-    # one-hot over the combined (leaf, bin) axis, batched over features:
-    iota = jax.lax.broadcasted_iota(jnp.int32, (bf, bn, S), 2)
-    onehot = (iota == seg[:, :, None]).astype(jnp.float32)
+    if bins.dtype == jnp.uint8:
+        # uint8 pool bins: decompose the combined-axis one-hot into a
+        # bin-digit compare (uint8 vs uint8 — the bins panel is never
+        # widened) AND a leaf-digit compare against the narrow (1, bn)
+        # leaf row; only the boolean hit mask becomes f32 for the MXU.
+        s = jax.lax.broadcasted_iota(jnp.int32, (1, 1, S), 2)
+        b_of_s = (s % n_bins).astype(jnp.uint8)           # (1, 1, S)
+        l_of_s = s // n_bins                              # (1, 1, S)
+        onehot = ((bins[:, :, None] == b_of_s)
+                  & (leaf[:, :, None] == l_of_s)).astype(jnp.float32)
+    else:
+        seg = leaf * n_bins + bins                        # (bf, bn)
+        # one-hot over the combined (leaf, bin) axis, batched over
+        # features:
+        iota = jax.lax.broadcasted_iota(jnp.int32, (bf, bn, S), 2)
+        onehot = (iota == seg[:, :, None]).astype(jnp.float32)
     # per-feature MXU contraction over samples: (bf, S, bn) @ (bn, C)
     acc = jax.lax.dot_general(
         onehot, g,
@@ -59,11 +71,12 @@ def _hist_kernel(bins_ref, leaf_ref, g_ref, out_ref, *, n_bins: int,
 def histogram(bins_t: jax.Array, leaf: jax.Array, g: jax.Array, *,
               n_bins: int, n_leaves: int, block_f: int = 8,
               block_n: int = 256, interpret: bool = False) -> jax.Array:
-    """bins_t: (F, N) int32 feature-major bins; leaf: (N,) int32;
-    g: (N, C) f32  ->  hist (F, n_leaves*n_bins, C) f32.
+    """bins_t: (F, N) int32 or uint8 feature-major bins; leaf: (N,)
+    int32; g: (N, C) f32  ->  hist (F, n_leaves*n_bins, C) f32.
 
     Pre-padded: F % block_f == 0, N % block_n == 0; padded samples must
-    carry g == 0 (they then contribute nothing).
+    carry g == 0 (they then contribute nothing).  uint8 bins take the
+    widening-free compare path (see `_hist_kernel`).
     """
     F, N = bins_t.shape
     C = g.shape[1]
@@ -85,8 +98,10 @@ def histogram(bins_t: jax.Array, leaf: jax.Array, g: jax.Array, *,
 
 def histogram_ref(bins_t: jax.Array, leaf: jax.Array, g: jax.Array, *,
                   n_bins: int, n_leaves: int) -> jax.Array:
-    """Pure-jnp oracle (the boosting trainer's segment_sum path)."""
+    """Pure-jnp oracle (the boosting trainer's segment_sum path).
+    Accepts int32 or uint8 bins; promotion to int32 segment ids is
+    benign here — the oracle optimizes for clarity, not bandwidth."""
     F, N = bins_t.shape
-    seg = leaf[None, :] * n_bins + bins_t                 # (F, N)
+    seg = leaf[None, :] * n_bins + bins_t.astype(jnp.int32)  # (F, N)
     return jax.vmap(lambda s: jax.ops.segment_sum(
         g, s, num_segments=n_leaves * n_bins))(seg)

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.kernels import binarize as _binarize_k
 from repro.kernels import fused_predict as _fused_k
+from repro.kernels import histogram as _hist_k
 from repro.kernels import l2dist as _l2_k
 from repro.kernels import leaf_gather as _gather_k
 from repro.kernels import leaf_index as _index_k
@@ -504,6 +505,63 @@ def _fused_pallas_bp(x, borders, sf_bp, sb_bp, lv, *, block_n=None,
 
 
 # --------------------------------------------------------------------------
+# Registered implementations: histogram (training-side hot loop)
+# --------------------------------------------------------------------------
+# Layout-independent like binarize: the inputs carry no lowered model
+# structure, only the feature-major bin stream and per-sample stats.
+@registry.register("histogram", "ref", dtypes=("int32", "uint8"),
+                   layouts=ALL_LAYOUTS,
+                   constraints="any shape; segment-sum oracle")
+def _histogram_ref(bins_t, leaf, g, *, n_bins, n_leaves, **_blocks):
+    return _hist_k.histogram_ref(bins_t, leaf, g, n_bins=n_bins,
+                                 n_leaves=n_leaves)
+
+
+def _histogram_pallas_impl(bins_t, leaf, g, *, n_bins, n_leaves,
+                           block_f, block_n):
+    F, N = bins_t.shape
+    if block_f is None or block_n is None:
+        bf, bn = _tuning.best_hist_blocks(
+            F, n_leaves, n_bins, g.shape[1], n_rows=N,
+            bins_bytes=1 if bins_t.dtype == jnp.uint8 else 4)
+        block_f = block_f or bf
+        block_n = block_n or bn
+    Fp = _round_up(max(F, 1), block_f)
+    Np = _round_up(max(N, 1), block_n)
+    # padded samples carry g == 0 so they accumulate nothing; padded
+    # features land in hist rows [F:] and are sliced off
+    binsp = _pad_dim(_pad_dim(bins_t, 0, Fp), 1, Np)
+    leafp = _pad_dim(leaf, 0, Np)
+    gp = _pad_dim(g, 0, Np)
+    out = _hist_k.histogram(binsp, leafp, gp, n_bins=n_bins,
+                            n_leaves=n_leaves, block_f=block_f,
+                            block_n=block_n, interpret=_interpret())
+    return out[:F]
+
+
+@registry.register("histogram", "pallas", dtypes=("int32",),
+                   layouts=ALL_LAYOUTS,
+                   constraints="pads F/N to block multiples; padded "
+                               "samples get g == 0")
+def _histogram_pallas(bins_t, leaf, g, *, n_bins, n_leaves, block_f=None,
+                      block_n=None):
+    return _histogram_pallas_impl(bins_t, leaf, g, n_bins=n_bins,
+                                  n_leaves=n_leaves, block_f=block_f,
+                                  block_n=block_n)
+
+
+@registry.register("histogram", "pallas_u8", dtypes=("uint8",),
+                   layouts=ALL_LAYOUTS,
+                   constraints="uint8 pool bins compared unwidened "
+                               "against the bin digit; <= 256 bins")
+def _histogram_pallas_u8(bins_t, leaf, g, *, n_bins, n_leaves,
+                         block_f=None, block_n=None):
+    return _histogram_pallas_impl(bins_t, leaf, g, n_bins=n_bins,
+                                  n_leaves=n_leaves, block_f=block_f,
+                                  block_n=block_n)
+
+
+# --------------------------------------------------------------------------
 # Public ops — legacy `backend=` kwargs as shims over registry dispatch
 # --------------------------------------------------------------------------
 def _bins_dtype(bins: jax.Array) -> str:
@@ -546,6 +604,24 @@ def leaf_gather(idx: jax.Array, leaf_values: jax.Array, *,
     """(N, T) i32, (T, L, C) f32 -> (N, C) f32 summed leaf values."""
     return registry.dispatch("leaf_gather", backend, idx, leaf_values,
                              block_n=block_n, block_t=block_t)
+
+
+def histogram(bins_t: jax.Array, leaf: jax.Array, g: jax.Array, *,
+              n_bins: int, n_leaves: int, backend: Backend = "auto",
+              block_f: int | None = None,
+              block_n: int | None = None) -> jax.Array:
+    """(F, N) i32|u8 feature-major bins, (N,) i32 leaf ids, (N, C) f32
+    per-sample stats -> (F, n_leaves*n_bins, C) f32 histogram.
+
+    The training-side hot loop (one call per tree level): stats are
+    accumulated per (feature, leaf, bin) cell.  uint8 pool bins route
+    to the u8 kernel variant, which never widens the bins panel.
+    `g` usually carries gradients and hessians concatenated on the
+    stats axis so both histograms cost one pass."""
+    return registry.dispatch("histogram", backend, bins_t, leaf, g,
+                             dtype=_bins_dtype(bins_t), n_bins=n_bins,
+                             n_leaves=n_leaves, block_f=block_f,
+                             block_n=block_n)
 
 
 def l2sq_rowwise(q: jax.Array, refs: jax.Array, *, backend: Backend = "auto",

@@ -8,7 +8,7 @@ through every call site.  Each op registers named implementations with
 capability metadata:
 
   op            one of: binarize, leaf_index, leaf_gather, l2sq,
-                fused_predict
+                fused_predict, histogram
   impl name     "ref" (pure jnp oracle), "pallas" (TPU kernel,
                 interpret mode off-TPU), and dtype-specialized variants
                 such as "pallas_u8" / "ref_u8" (uint8 bin stream — the
@@ -36,9 +36,10 @@ import dataclasses
 import functools
 from typing import Any, Callable, Optional
 
-# The five kernel ops every backend family must cover.
+# The six kernel ops every backend family must cover (histogram is the
+# training-side op; the other five serve prediction).
 CORE_OPS = ("binarize", "leaf_index", "leaf_gather", "l2sq",
-            "fused_predict")
+            "fused_predict", "histogram")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -123,6 +123,68 @@ def best_fused_blocks(F: int, D: int, L: int, C: int,
 
 
 # --------------------------------------------------------------------------
+# Training histogram block planning (see repro.kernels.histogram)
+# --------------------------------------------------------------------------
+def hist_footprint(block_f: int, block_n: int, n_leaves: int,
+                   n_bins: int, n_stats: int, *,
+                   bins_bytes: int = 1) -> int:
+    """VMEM working set of one histogram grid step.
+
+    The (block_f, block_n, L*B) one-hot selector panel dominates — the
+    training twin of the (N, L) gather one-hot `best_fused_blocks`
+    budgets — plus the bins tile (`bins_bytes=1` for uint8 pool bins),
+    the (block_n, n_stats) gradient/hessian tile and the
+    (block_f, L*B, n_stats) accumulator."""
+    S = n_leaves * n_bins
+    return (block_f * block_n * S * 4          # one-hot selector (f32)
+            + block_f * block_n * bins_bytes   # bins tile
+            + block_n * n_stats * 4            # g/h stats tile
+            + block_f * S * n_stats * 4)       # accumulator
+
+
+@dataclasses.dataclass
+class HistCandidate:
+    block_f: int
+    block_n: int
+    footprint: int
+    score: float
+
+
+def candidates_hist(F: int, n_leaves: int, n_bins: int, n_stats: int,
+                    budget: int = VMEM_BUDGET, *,
+                    n_rows: int | None = None,
+                    bins_bytes: int = 1) -> list[HistCandidate]:
+    """Candidate (block_f, block_n) grid for the histogram kernel, best
+    first.  Scored like `candidates_fused`: prefer lane-aligned sample
+    blocks and larger tiles once aligned, penalize candidates whose
+    padding (features to block_f, rows to block_n) is mostly zeros."""
+    out = []
+    for bf in (1, 2, 4, 8, 16, 32):
+        for bn in (128, 256, 512, 1024):
+            fp = hist_footprint(bf, bn, n_leaves, n_bins, n_stats,
+                                bins_bytes=bins_bytes)
+            if fp > budget:
+                continue
+            score = _align_score(bn, LANE) * min(1.0, fp / budget + 0.2) \
+                * (bf * bn) ** 0.25
+            if n_rows is not None:
+                score *= _pad_utilization(n_rows, bn)
+            score *= _pad_utilization(F, bf)
+            out.append(HistCandidate(bf, bn, fp, score))
+    return sorted(out, key=lambda c: -c.score)
+
+
+def best_hist_blocks(F: int, n_leaves: int, n_bins: int, n_stats: int, *,
+                     n_rows: int | None = None,
+                     bins_bytes: int = 1) -> tuple[int, int]:
+    cands = candidates_hist(F, n_leaves, n_bins, n_stats,
+                            n_rows=n_rows, bins_bytes=bins_bytes)
+    if not cands:
+        return 1, 128
+    return cands[0].block_f, cands[0].block_n
+
+
+# --------------------------------------------------------------------------
 # Bulk-scoring chunk planning (see repro.scoring.scorer)
 # --------------------------------------------------------------------------
 # Working-set budget per in-flight scoring chunk.  The binding

@@ -1,2 +1,2 @@
 """Training substrate: optimizers, fault-tolerant trainer, checkpointing."""
-from repro.training import checkpoint, optimizer, trainer  # noqa: F401
+from repro.training import checkpoint, gbdt, optimizer, trainer  # noqa: F401

@@ -1,0 +1,519 @@
+"""Quantized-first GBDT training: boosting over a `QuantizedPool`.
+
+The training twin of the PR-5 scoring subsystem, closing ROADMAP item 3.
+The seed trainer (`core.boosting._fit_scan`) binarizes its own float
+matrix and scatters histograms through `jax.ops.segment_sum`, bypassing
+the kernel registry entirely.  This module trains on the same uint8
+representation everything else consumes:
+
+  * ingest   a `QuantizedPool` directly, or any `scoring.sources`
+             RowSource streamed through `quantize_pool_chunked` — float
+             rows live O(chunk) like `BulkScorer`, only one byte per
+             (sample, feature) is retained
+  * grow     per level, gradient/hessian histograms go through the
+             registered `histogram` op (ref segment-sum oracle or the
+             Pallas one-hot-matmul kernel; uint8 pool bins route to the
+             widening-free `pallas_u8` variant).  Gradients and hessians
+             are concatenated on the stats axis so both histograms cost
+             ONE accumulation pass, and level d sizes its histogram to
+             the 2^d leaves that exist instead of the full 2^depth
+  * serve    the fitted `ObliviousEnsemble` goes straight through
+             `Predictor.build`, and the trainer's reported training-time
+             predictions are that plan's own `raw(pool)` — so the CLI's
+             train->serve parity check is exact by construction
+
+Per-tree math is the seed's, bit-for-bit per channel: same split gains,
+same Newton leaf values, same RNG stream (`key, sub, sub2` per
+iteration), same loss-after-update history semantics.  The boosting
+loop itself runs in Python (one jitted call per stage) so iterations
+can be checkpointed and resumed mid-run: `TrainState` carries the
+ensemble-so-far, the accumulated raw predictions and the RNG key, and a
+killed run restored from its last checkpoint finishes with a
+bit-identical ensemble.
+
+Compiled-shape contract: one trace per (stage, level) — histogram
+dispatch counts stay <= depth across any number of fits on same-shaped
+data, and training on a pool performs ZERO binarize dispatches
+(`history["dispatch_delta"]` records the proof).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses as losses_lib
+from repro.core import predictor as predictor_mod
+from repro.core import quantize
+from repro.core.boosting import (NEG_INF, BoostingParams, _gain_term,
+                                 _ordered_update)
+from repro.core.trees import ObliviousEnsemble
+from repro.kernels import ops, registry
+from repro.kernels import tuning as _tuning
+from repro.serving.metrics import PercentileReservoir
+from repro.training.checkpoint import CheckpointManager
+
+
+# --------------------------------------------------------------------------
+# Observability
+# --------------------------------------------------------------------------
+class TrainingMetrics:
+    """Per-iteration training observability.
+
+    Mirrors `serving.metrics.ServerMetrics`: stage timings flow through
+    the shared `PercentileReservoir`, throughput is `rows_per_s` — the
+    same unit ServerMetrics and ScoringMetrics report — so training and
+    serving dashboards share one vocabulary.  `rows_trained` counts
+    sample-rows per boosting iteration (N rows x T iterations).
+    """
+
+    MAX_SAMPLES = 8192
+
+    def __init__(self, name: str = "gbdt"):
+        self.name = name
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+        self.iterations = 0
+        self.rows_trained = 0
+        self.quantize_s = 0.0
+        self.n_chunks = 0
+        self.chunk_rows = 0
+        self.hist_dispatches = 0
+        self.train_loss: list[float] = []
+        self._iter = PercentileReservoir(self.MAX_SAMPLES)
+        self._hist = PercentileReservoir(self.MAX_SAMPLES, seed=1)
+        self._split = PercentileReservoir(self.MAX_SAMPLES, seed=2)
+        self._leaf = PercentileReservoir(self.MAX_SAMPLES, seed=3)
+        self._busy = {"hist": 0.0, "split": 0.0, "leaf": 0.0, "iter": 0.0}
+
+    def note_quantize(self, seconds: float, n_chunks: int,
+                      chunk_rows: int) -> None:
+        with self._lock:
+            self.quantize_s += seconds
+            self.n_chunks += n_chunks
+            self.chunk_rows = chunk_rows
+
+    def note_iteration(self, n_rows: int, hist_s: float, split_s: float,
+                       leaf_s: float, iter_s: float,
+                       loss_value: float) -> None:
+        with self._lock:
+            self.iterations += 1
+            self.rows_trained += n_rows
+            self.train_loss.append(float(loss_value))
+            self._iter.add(iter_s)
+            self._hist.add(hist_s)
+            self._split.add(split_s)
+            self._leaf.add(leaf_s)
+            self._busy["hist"] += hist_s
+            self._busy["split"] += split_s
+            self._busy["leaf"] += leaf_s
+            self._busy["iter"] += iter_s
+
+    def note_hist_dispatches(self, n: int) -> None:
+        with self._lock:
+            self.hist_dispatches += n
+
+    def snapshot(self) -> dict[str, Any]:
+        """One flat dict, same shape discipline as ServerMetrics'."""
+        with self._lock:
+            dt = max(time.perf_counter() - self._t0, 1e-9)
+            busy = max(self._busy["iter"], 1e-9)
+
+            def p(res: PercentileReservoir, q: float) -> float:
+                return res.percentile(q) * 1e3 if res.seen else 0.0
+
+            return {
+                "model": self.name,
+                "iterations": self.iterations,
+                "rows_trained": self.rows_trained,
+                "rows_per_s": self.rows_trained / dt,
+                "iter_p50_ms": p(self._iter, 50),
+                "iter_p99_ms": p(self._iter, 99),
+                "hist_p50_ms": p(self._hist, 50),
+                "split_p50_ms": p(self._split, 50),
+                "leaf_p50_ms": p(self._leaf, 50),
+                "hist_frac": self._busy["hist"] / busy,
+                "split_frac": self._busy["split"] / busy,
+                "leaf_frac": self._busy["leaf"] / busy,
+                "first_train_loss": (self.train_loss[0]
+                                     if self.train_loss else float("nan")),
+                "final_train_loss": (self.train_loss[-1]
+                                     if self.train_loss else float("nan")),
+                "quantize_s": self.quantize_s,
+                "n_chunks": self.n_chunks,
+                "chunk_rows": self.chunk_rows,
+                "hist_dispatches": self.hist_dispatches,
+            }
+
+
+# --------------------------------------------------------------------------
+# Checkpointable boosting state
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class TrainState:
+    """Everything a resumed run needs to finish bit-identically.
+
+    The RNG `key` is the CARRIED key (already split `iteration` times),
+    and `raw` the accumulated train-time predictions — restoring both
+    replays the remaining iterations on exactly the seed stream and
+    residuals the killed run would have used.
+    """
+
+    iteration: int
+    key: np.ndarray                # (2,) uint32 carried PRNG key
+    split_features: np.ndarray     # (k, D) int32
+    split_bins: np.ndarray         # (k, D) int32
+    leaf_values: np.ndarray        # (k, L, C) float32
+    raw: np.ndarray                # (N, C) float32
+    train_loss: np.ndarray         # (k,) float32
+
+    def tree(self) -> dict[str, np.ndarray]:
+        return {
+            "iteration": np.asarray(self.iteration, np.int64),
+            "key": np.asarray(self.key),
+            "split_features": np.asarray(self.split_features, np.int32),
+            "split_bins": np.asarray(self.split_bins, np.int32),
+            "leaf_values": np.asarray(self.leaf_values, np.float32),
+            "raw": np.asarray(self.raw, np.float32),
+            "train_loss": np.asarray(self.train_loss, np.float32),
+        }
+
+    @classmethod
+    def from_tree(cls, tree: dict[str, np.ndarray]) -> "TrainState":
+        return cls(iteration=int(tree["iteration"]),
+                   key=np.asarray(tree["key"]),
+                   split_features=np.asarray(tree["split_features"]),
+                   split_bins=np.asarray(tree["split_bins"]),
+                   leaf_values=np.asarray(tree["leaf_values"]),
+                   raw=np.asarray(tree["raw"]),
+                   train_loss=np.asarray(tree["train_loss"]))
+
+
+# --------------------------------------------------------------------------
+# Jitted per-stage helpers (module level: the compile cache is shared
+# across trainer instances, so fitting twice compiles nothing new)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("loss",))
+def _grad_stack(raw, y, *, loss):
+    """(N, C) g and (N, C) h concatenated -> (N, 2C): one histogram
+    pass accumulates both."""
+    g, h = loss.grad_hess(raw, y)
+    return jnp.concatenate([g, h], axis=1)
+
+
+@partial(jax.jit, static_argnames=("n_bins", "n_leaves", "backend"))
+def _hist_level(bins_t, leaf, gh, *, n_bins, n_leaves, backend):
+    return ops.histogram(bins_t, leaf, gh, n_bins=n_bins,
+                         n_leaves=n_leaves, backend=backend)
+
+
+@partial(jax.jit, static_argnames=("n_bins", "d", "l2"))
+def _split_level(hist, valid, bins_t, leaf, *, n_bins, d, l2):
+    """Pick the level's oblivious split from the (F, 2^d * n_bins, 2C)
+    histogram and refine leaf ids.  Reproduces the seed trainer's gain
+    math bit-for-bit per channel — the only difference is that the leaf
+    axis holds the 2^d leaves that exist at level d instead of the full
+    2^depth (absent leaves contribute exact zeros to every gain sum)."""
+    F, S, C2 = hist.shape
+    n_leaves = S // n_bins
+    C = C2 // 2
+    h4 = hist.reshape(F, n_leaves, n_bins, C2)
+    incl = jnp.cumsum(h4, axis=2)
+    total = incl[:, :, -1:, :]
+    # left of border b = bins < b -> inclusive cumsum shifted by one
+    left = jnp.pad(incl[:, :, :-1, :], ((0, 0), (0, 0), (1, 0), (0, 0)))
+    right = total - left
+    gain = (_gain_term(left[..., :C], left[..., C:], l2)
+            + _gain_term(right[..., :C], right[..., C:], l2)
+            ).sum(axis=(1, 3))                             # (F, n_bins)
+    # a split must put hessian mass on both sides; degenerate splits
+    # (constant features) are never selected
+    nonempty = (left[..., C:].sum(axis=(1, 3)) > 0) \
+        & (right[..., C:].sum(axis=(1, 3)) > 0)
+    gain = jnp.where(valid & nonempty, gain, NEG_INF)
+    flat = jnp.argmax(gain.reshape(-1))
+    f_star = (flat // n_bins).astype(jnp.int32)
+    b_star = (flat % n_bins).astype(jnp.int32)
+    go_right = (bins_t[f_star].astype(jnp.int32) >= b_star).astype(jnp.int32)
+    return f_star, b_star, leaf | (go_right << d)
+
+
+@partial(jax.jit, static_argnames=("loss", "n_leaves", "lr", "l2"))
+def _finish_plain(raw, y, gh, leaf, *, loss, n_leaves, lr, l2):
+    C = gh.shape[1] // 2
+    s = jax.ops.segment_sum(gh, leaf, num_segments=n_leaves)   # (L, 2C)
+    w = -lr * s[:, :C] / (s[:, C:] + l2)                       # (L, C)
+    raw = raw + w[leaf]
+    return raw, w, loss.value(raw, y)
+
+
+@partial(jax.jit, static_argnames=("loss", "n_leaves", "lr", "l2"))
+def _finish_ordered(raw, y, gh, leaf, key, *, loss, n_leaves, lr, l2):
+    C = gh.shape[1] // 2
+    g, h = gh[:, :C], gh[:, C:]
+    s = jax.ops.segment_sum(gh, leaf, num_segments=n_leaves)
+    w = -lr * s[:, :C] / (s[:, C:] + l2)
+    raw = raw + _ordered_update(leaf, g, h, key, lr, l2, n_leaves)
+    return raw, w, loss.value(raw, y)
+
+
+@partial(jax.jit, static_argnames=("n_features", "keep"))
+def _feat_mask(key, *, n_features, keep):
+    perm = jax.random.permutation(key, n_features)
+    return jnp.zeros((n_features,), bool).at[perm[:keep]].set(True)
+
+
+# --------------------------------------------------------------------------
+# Trainer
+# --------------------------------------------------------------------------
+class GBDTTrainer:
+    """Quantized-first boosting: `fit_pool` / `fit_source` / `fit_bins`.
+
+    One trainer instance owns one `TrainingMetrics`; the jit caches are
+    module-level, so instances are cheap.  `backend` follows the kernel
+    registry's legacy shim values ("auto" / "ref" / "pallas").
+    """
+
+    def __init__(self, loss: losses_lib.Loss, params: BoostingParams, *,
+                 backend: str = "auto", name: str = "gbdt"):
+        self.loss = loss
+        self.params = params
+        self.backend = backend
+        self.metrics = TrainingMetrics(name)
+        self.pool_: Optional[quantize.QuantizedPool] = None
+        self.plan_: Optional[predictor_mod.Predictor] = None
+
+    # -- entry points ------------------------------------------------------
+    def fit_pool(self, pool: quantize.QuantizedPool, y, *, borders,
+                 n_borders=None,
+                 checkpoint: Optional[CheckpointManager] = None,
+                 checkpoint_every: int = 0,
+                 resume_from: Optional[int] = None
+                 ) -> tuple[ObliviousEnsemble, dict]:
+        """Train on an existing uint8 pool: ZERO binarize dispatches."""
+        fp = quantize.borders_fingerprint(borders)
+        if pool.fingerprint != fp:
+            raise ValueError(
+                f"pool was quantized under a different schema: pool "
+                f"fingerprint {pool.fingerprint} != borders {fp}")
+        self.pool_ = pool
+        return self._fit_bins(pool.bins, y, borders=borders,
+                              n_borders=n_borders, pool=pool,
+                              checkpoint=checkpoint,
+                              checkpoint_every=checkpoint_every,
+                              resume_from=resume_from)
+
+    def fit_bins(self, bins, y, *, borders, n_borders=None,
+                 checkpoint: Optional[CheckpointManager] = None,
+                 checkpoint_every: int = 0,
+                 resume_from: Optional[int] = None
+                 ) -> tuple[ObliviousEnsemble, dict]:
+        """Train on a raw (N, F) int32/uint8 bins matrix — the escape
+        hatch for > 255 borders, where no uint8 pool can exist."""
+        return self._fit_bins(jnp.asarray(bins), y, borders=borders,
+                              n_borders=n_borders, pool=None,
+                              checkpoint=checkpoint,
+                              checkpoint_every=checkpoint_every,
+                              resume_from=resume_from)
+
+    def fit_source(self, source, y, *, max_bins: Optional[int] = None,
+                   chunk_rows: int = 0, sample_rows: int = 65536,
+                   checkpoint: Optional[CheckpointManager] = None,
+                   checkpoint_every: int = 0,
+                   resume_from: Optional[int] = None
+                   ) -> tuple[ObliviousEnsemble, dict]:
+        """Out-of-core ingest: stream a `RowSource` chunk-by-chunk
+        through `quantize_pool_chunked`, then boost on the pool.
+
+        Float rows exist only one chunk at a time (the `BulkScorer`
+        memory contract); the retained representation is one byte per
+        (sample, feature).  Two streaming passes: border computation
+        (reservoir sample) and binarization."""
+        from repro.scoring import sources as sources_lib
+
+        if max_bins is None:
+            max_bins = self.params.max_bins
+        if chunk_rows <= 0:
+            chunk_rows = _tuning.best_chunk_rows(source.n_features, 1)
+        t0 = time.perf_counter()
+        borders, n_borders = quantize.compute_borders_chunked(
+            sources_lib.iter_chunks(source, chunk_rows), max_bins,
+            sample_rows=sample_rows)
+        pool = quantize.quantize_pool_chunked(
+            sources_lib.iter_chunks(source, chunk_rows), borders,
+            backend=self.backend)
+        n_chunks = -(-source.n_rows // chunk_rows)
+        self.metrics.note_quantize(time.perf_counter() - t0, n_chunks,
+                                   chunk_rows)
+        ens, history = self.fit_pool(pool, y, borders=borders,
+                                     n_borders=n_borders,
+                                     checkpoint=checkpoint,
+                                     checkpoint_every=checkpoint_every,
+                                     resume_from=resume_from)
+        history["chunk_rows"] = chunk_rows
+        history["n_chunks"] = n_chunks
+        return ens, history
+
+    # -- core loop ---------------------------------------------------------
+    def _fit_bins(self, bins, y, *, borders, n_borders, pool,
+                  checkpoint, checkpoint_every, resume_from):
+        p = self.params
+        loss = self.loss
+        N, F = bins.shape
+        yj = jnp.asarray(y)
+        raw0 = loss.init_raw(yj)
+        C = raw0.shape[1]
+        depth, L = p.depth, 1 << p.depth
+        borders = jnp.asarray(borders)
+        n_bins = int(borders.shape[0]) + 1
+        if n_borders is None:
+            n_borders = jnp.asarray(
+                np.isfinite(np.asarray(borders)).sum(0).astype(np.int32))
+        bins_t = jnp.asarray(bins).T
+        b_iota = jnp.arange(n_bins, dtype=jnp.int32)
+        # valid split borders: 1 <= b <= n_borders[f]
+        base_valid = (b_iota[None, :] >= 1) \
+            & (b_iota[None, :] <= jnp.asarray(n_borders)[:, None])
+
+        stats0 = registry.call_stats()
+
+        # resume: restore the carried key / raw / ensemble-so-far
+        sf_rows: list[np.ndarray] = []
+        sb_rows: list[np.ndarray] = []
+        lv_rows: list[np.ndarray] = []
+        loss_vals: list[float] = []
+        start = 0
+        key = jax.random.PRNGKey(p.seed)
+        raw = raw0
+        if checkpoint is not None and resume_from is not None:
+            step = None if resume_from < 0 else resume_from
+            state = TrainState.from_tree(checkpoint.restore(step))
+            if state.raw.shape != (N, C):
+                raise ValueError(
+                    f"checkpoint raw shape {state.raw.shape} does not "
+                    f"match this dataset ({(N, C)})")
+            if state.iteration > p.n_trees:
+                raise ValueError(
+                    f"checkpoint is at iteration {state.iteration} > "
+                    f"n_trees {p.n_trees}")
+            start = state.iteration
+            key = jnp.asarray(state.key)
+            raw = jnp.asarray(state.raw)
+            sf_rows = list(state.split_features)
+            sb_rows = list(state.split_bins)
+            lv_rows = list(state.leaf_values)
+            loss_vals = [float(v) for v in state.train_loss]
+
+        keep = max(1, int(F * p.rsm))
+        for it in range(start, p.n_trees):
+            t_iter = time.perf_counter()
+            key, sub, sub2 = jax.random.split(key, 3)
+            gh = _grad_stack(raw, yj, loss=loss)
+            if p.rsm < 1.0:
+                valid = base_valid & _feat_mask(sub, n_features=F,
+                                                keep=keep)[:, None]
+            else:
+                valid = base_valid
+            leaf = jnp.zeros((N,), jnp.int32)
+            sf_d: list = []
+            sb_d: list = []
+            hist_s = split_s = 0.0
+            for d in range(depth):
+                t0 = time.perf_counter()
+                hist = _hist_level(bins_t, leaf, gh, n_bins=n_bins,
+                                   n_leaves=1 << d, backend=self.backend)
+                hist.block_until_ready()
+                t1 = time.perf_counter()
+                hist_s += t1 - t0
+                f_star, b_star, leaf = _split_level(
+                    hist, valid, bins_t, leaf, n_bins=n_bins, d=d,
+                    l2=p.l2_reg)
+                leaf.block_until_ready()
+                split_s += time.perf_counter() - t1
+                sf_d.append(f_star)
+                sb_d.append(b_star)
+            t2 = time.perf_counter()
+            if p.ordered:
+                raw, w, val = _finish_ordered(
+                    raw, yj, gh, leaf, sub2, loss=loss, n_leaves=L,
+                    lr=p.learning_rate, l2=p.l2_reg)
+            else:
+                raw, w, val = _finish_plain(
+                    raw, yj, gh, leaf, loss=loss, n_leaves=L,
+                    lr=p.learning_rate, l2=p.l2_reg)
+            raw.block_until_ready()
+            t3 = time.perf_counter()
+            sf_rows.append(np.asarray(jnp.stack(sf_d), np.int32)
+                           if sf_d else np.zeros((0,), np.int32))
+            sb_rows.append(np.asarray(jnp.stack(sb_d), np.int32)
+                           if sb_d else np.zeros((0,), np.int32))
+            lv_rows.append(np.asarray(w, np.float32))
+            loss_vals.append(float(val))
+            self.metrics.note_iteration(N, hist_s, split_s, t3 - t2,
+                                        t3 - t_iter, loss_vals[-1])
+            done = it + 1
+            if checkpoint is not None and checkpoint_every > 0 and (
+                    done % checkpoint_every == 0 or done == p.n_trees):
+                checkpoint.save(done, TrainState(
+                    iteration=done, key=np.asarray(key),
+                    split_features=np.stack(sf_rows),
+                    split_bins=np.stack(sb_rows),
+                    leaf_values=np.stack(lv_rows),
+                    raw=np.asarray(raw),
+                    train_loss=np.asarray(loss_vals, np.float32)).tree())
+        if checkpoint is not None:
+            checkpoint.wait()
+
+        T = len(sf_rows)
+        sfs = (jnp.asarray(np.stack(sf_rows), jnp.int32) if T
+               else jnp.zeros((0, depth), jnp.int32))
+        sbs = (jnp.asarray(np.stack(sb_rows), jnp.int32) if T
+               else jnp.zeros((0, depth), jnp.int32))
+        lvs = (jnp.asarray(np.stack(lv_rows), jnp.float32) if T
+               else jnp.zeros((0, L, C), jnp.float32))
+        ensemble = ObliviousEnsemble(
+            split_features=sfs, split_bins=sbs, leaf_values=lvs,
+            borders=borders, n_borders=jnp.asarray(n_borders),
+            base_score=raw0[0].astype(jnp.float32))
+
+        # Closed train->serve loop: the reported training-time
+        # predictions ARE a serving plan's output on the training pool,
+        # so `Predictor.build` round-trips to EXACT parity (same
+        # lowering, same jitted program, same inputs).  The int32
+        # escape hatch (> 255 borders, no pool) evaluates through the
+        # same staged ops instead.
+        if pool is not None:
+            self.plan_ = predictor_mod.Predictor.build(
+                ensemble, strategy="staged", layout="soa",
+                backend=self.backend)
+            final_raw = self.plan_.raw(pool)
+        else:
+            idx = ops.leaf_index(jnp.asarray(bins), sfs, sbs,
+                                 backend=self.backend)
+            final_raw = raw0[:1] + ops.leaf_gather(idx, lvs,
+                                                   backend=self.backend)
+
+        delta = {op: n - stats0.get(op, 0)
+                 for op, n in registry.call_stats().items()
+                 if n != stats0.get(op, 0)}
+        self.metrics.note_hist_dispatches(delta.get("histogram", 0))
+        history = {
+            "train_loss": np.asarray(loss_vals, np.float32),
+            "final_metric": float(loss.metric(raw, yj)),
+            "final_raw": np.asarray(final_raw, np.float32),
+            # float-association drift between the accumulated training
+            # raw and the served re-score (systematic under ordered
+            # boosting, where stored leaf values deliberately differ
+            # from the ordered update)
+            "serve_drift": float(np.max(np.abs(
+                np.asarray(final_raw) - np.asarray(raw)))) if T else 0.0,
+            "dispatch_delta": delta,
+            "metrics": self.metrics.snapshot(),
+        }
+        return ensemble, history

@@ -21,6 +21,7 @@ import pytest
 from repro.core import layout as layout_mod
 from repro.core import trees
 from repro.core.trees import ObliviousEnsemble
+from repro.kernels import histogram as hist_k
 from repro.kernels import ops, ref, registry
 
 # One pytest param per capability-table cell.  New registrations expand
@@ -132,6 +133,26 @@ def test_cell_matches_ref_oracle(op, impl, lay, dtype, scenario):
         _assert_close(fn(want_idx, lv), ref.leaf_gather(want_idx, lv))
         return
 
+    if op == "histogram":
+        # feature-major bins (the training stream), random leaf ids and
+        # g/h stats vs the segment-sum oracle.  The mixed scenario's
+        # NaN features land in bin 0 by contract; the edge scenario
+        # covers bin ids at the 0/255 uint8 edges and batch=1.
+        # n_leaves=1 is the single-leaf (depth-0 level) case.
+        rng = np.random.default_rng(31)
+        n = int(bins.shape[0])
+        n_bins = int(borders.shape[0]) + 1
+        bins_t = jnp.transpose(bins)
+        for n_leaves in (1, 4):
+            leaf = jnp.asarray(rng.integers(0, n_leaves, n)
+                               .astype(np.int32))
+            g = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+            got = fn(bins_t, leaf, g, n_bins=n_bins, n_leaves=n_leaves)
+            want = hist_k.histogram_ref(bins_t, leaf, g, n_bins=n_bins,
+                                        n_leaves=n_leaves)
+            _assert_close(got, want)
+        return
+
     assert op == "fused_predict", f"harness does not cover op {op!r}"
     want = ref.fused_predict(x, borders, sf, sb, lv)
     if lay in ("soa", "depth_grouped"):
@@ -153,3 +174,63 @@ def test_table_covers_every_core_op():
     assert set(registry.CORE_OPS) <= ops_seen
     bp = {(c.values[0]) for c in CELLS if c.values[2] == "bitpacked"}
     assert {"leaf_index", "fused_predict"} <= bp
+
+
+def test_train_on_pool_matches_train_on_float():
+    """The quantized-first trainer (uint8 pool, registered histogram
+    kernels) must reproduce the seed float-path scan to the leaf-value
+    level: identical split structure, identical leaf values, identical
+    loss trajectory — and perform zero binarize dispatches while
+    boosting."""
+    from repro.core import boosting
+    from repro.core.losses import make_loss
+
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(400, 6)).astype(np.float32)
+    y = (x[:, 0] - 2.0 * x[:, 2] + 0.3 * rng.normal(size=400)
+         ).astype(np.float32)
+    loss = make_loss("rmse")
+    params = boosting.BoostingParams(n_trees=8, depth=3, max_bins=16,
+                                     seed=3)
+    ens_f, hist_f = boosting.fit_scan(x, y, loss=loss, params=params)
+    ens_p, hist_p = boosting.fit(x, y, loss=loss, params=params)
+
+    _assert_int_equal(ens_p.split_features, ens_f.split_features)
+    _assert_int_equal(ens_p.split_bins, ens_f.split_bins)
+    np.testing.assert_allclose(np.asarray(ens_p.leaf_values),
+                               np.asarray(ens_f.leaf_values),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(hist_p["train_loss"], hist_f["train_loss"],
+                               rtol=0, atol=1e-6)
+    assert hist_p["dispatch_delta"].get("binarize", 0) == 0
+    assert hist_p["dispatch_delta"].get("histogram", 0) > 0
+
+
+def test_histogram_additive_across_row_chunks():
+    """Property: histograms are additive over row chunks — summing the
+    per-chunk histograms equals the full-batch histogram (the invariant
+    chunked/streamed training relies on)."""
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=25)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 64),
+           f=st.integers(1, 5), n_bins=st.integers(1, 9),
+           n_leaves=st.integers(1, 4), frac=st.floats(0.0, 1.0))
+    def prop(seed, n, f, n_bins, n_leaves, frac):
+        rng = np.random.default_rng(seed)
+        bins_t = jnp.asarray(rng.integers(0, n_bins, (f, n))
+                             .astype(np.int32))
+        leaf = jnp.asarray(rng.integers(0, n_leaves, n).astype(np.int32))
+        g = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+        full = hist_k.histogram_ref(bins_t, leaf, g, n_bins=n_bins,
+                                    n_leaves=n_leaves)
+        k = int(round(frac * n))
+        parts = sum(
+            hist_k.histogram_ref(bins_t[:, lo:hi], leaf[lo:hi], g[lo:hi],
+                                 n_bins=n_bins, n_leaves=n_leaves)
+            for lo, hi in ((0, k), (k, n)) if hi > lo)
+        _assert_close(parts, full)
+
+    prop()

@@ -272,8 +272,11 @@ def test_registry_resolve_and_errors():
     assert registry.resolve("leaf_index", "ref", dtype="uint8") == "ref"
     with pytest.raises(KeyError, match="no implementation"):
         registry.resolve("binarize", "cuda")
+    # histogram became a registered op (the training side); a truly
+    # unknown op still raises
+    assert registry.resolve("histogram", "ref") == "ref"
     with pytest.raises(KeyError, match="unknown kernel op"):
-        registry.resolve("histogram", "ref")
+        registry.resolve("treeshap", "ref")
     with pytest.raises(ValueError, match="does not handle"):
         registry.resolve("leaf_gather", "pallas", dtype="uint8")
     with pytest.raises(ValueError):

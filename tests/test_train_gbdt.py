@@ -1,0 +1,234 @@
+"""Quantized-first training subsystem (repro.training.gbdt).
+
+Covers the contracts the trainer ships: checkpoint/resume finishing
+bit-identically, zero binarize dispatches while boosting on a pool,
+the <= depth histogram compiled-shape contract, the exact train->serve
+round trip through Predictor/GBDTServer, streamed-source ingest
+matching in-core pool training, and the TrainingMetrics snapshot.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import boosting, quantize
+from repro.core.losses import make_loss
+from repro.core.predictor import Predictor, proba_from_raw
+from repro.kernels import registry
+from repro.serving.engine import GBDTServer
+from repro.training.checkpoint import CheckpointManager
+from repro.training.gbdt import GBDTTrainer, TrainingMetrics, TrainState
+
+
+def _data(n=300, f=6, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    y = (x[:, 0] - 2.0 * x[:, 1] + 0.2 * rng.normal(size=n)
+         ).astype(np.float32)
+    return x, y
+
+
+def _pool_setup(x, max_bins=16):
+    borders, n_borders = quantize.compute_borders(x, max_bins)
+    pool = quantize.quantize_pool(jnp.asarray(x), borders)
+    return pool, borders, n_borders
+
+
+PARAMS = boosting.BoostingParams(n_trees=6, depth=3, max_bins=16, seed=1)
+
+
+def test_resume_is_bit_identical(tmp_path):
+    """Kill after k trees, resume from the checkpoint, finish with a
+    bit-identical ensemble and loss trajectory (the PR-5 chunk-index
+    resume contract, lifted to boosting iterations)."""
+    x, y = _data()
+    pool, borders, n_borders = _pool_setup(x)
+    loss = make_loss("rmse")
+
+    full_tr = GBDTTrainer(loss, PARAMS)
+    ens_full, hist_full = full_tr.fit_pool(pool, y, borders=borders,
+                                           n_borders=n_borders)
+
+    # "killed" run: checkpoint every 2 trees, stop at 4 by training a
+    # 4-tree variant (same seed => identical prefix)
+    ck = CheckpointManager(tmp_path / "ck", async_save=False)
+    killed = GBDTTrainer(
+        loss, boosting.BoostingParams(n_trees=4, depth=3, max_bins=16,
+                                      seed=1))
+    killed.fit_pool(pool, y, borders=borders, n_borders=n_borders,
+                    checkpoint=ck, checkpoint_every=2)
+    assert ck.latest() == 4
+
+    resumed_tr = GBDTTrainer(loss, PARAMS)
+    ens_res, hist_res = resumed_tr.fit_pool(
+        pool, y, borders=borders, n_borders=n_borders, checkpoint=ck,
+        resume_from=-1)
+
+    np.testing.assert_array_equal(np.asarray(ens_res.split_features),
+                                  np.asarray(ens_full.split_features))
+    np.testing.assert_array_equal(np.asarray(ens_res.split_bins),
+                                  np.asarray(ens_full.split_bins))
+    np.testing.assert_array_equal(np.asarray(ens_res.leaf_values),
+                                  np.asarray(ens_full.leaf_values))
+    np.testing.assert_array_equal(hist_res["train_loss"],
+                                  hist_full["train_loss"])
+    np.testing.assert_array_equal(hist_res["final_raw"],
+                                  hist_full["final_raw"])
+
+
+def test_resume_rejects_wrong_shape(tmp_path):
+    x, y = _data()
+    pool, borders, n_borders = _pool_setup(x)
+    loss = make_loss("rmse")
+    ck = CheckpointManager(tmp_path / "ck", async_save=False)
+    GBDTTrainer(loss, PARAMS).fit_pool(pool, y, borders=borders,
+                                       n_borders=n_borders,
+                                       checkpoint=ck, checkpoint_every=6)
+    x2, y2 = _data(n=120)
+    pool2, borders2, n_borders2 = _pool_setup(x2)
+    with pytest.raises(ValueError, match="does not match"):
+        GBDTTrainer(loss, PARAMS).fit_pool(
+            pool2, y2, borders=borders2, n_borders=n_borders2,
+            checkpoint=ck, resume_from=-1)
+
+
+def test_train_state_roundtrip():
+    st = TrainState(iteration=3, key=np.array([1, 2], np.uint32),
+                    split_features=np.zeros((3, 2), np.int32),
+                    split_bins=np.ones((3, 2), np.int32),
+                    leaf_values=np.zeros((3, 4, 1), np.float32),
+                    raw=np.zeros((10, 1), np.float32),
+                    train_loss=np.zeros((3,), np.float32))
+    back = TrainState.from_tree(st.tree())
+    assert back.iteration == 3
+    np.testing.assert_array_equal(back.key, st.key)
+    np.testing.assert_array_equal(back.leaf_values, st.leaf_values)
+
+
+def test_pool_boosting_zero_binarize_dispatch():
+    """The acceptance invariant: boosting on a QuantizedPool performs
+    zero binarize dispatches, and histogram dispatches == depth (one
+    trace per level) on a cold fit, 0 on a warmed refit."""
+    x, y = _data(seed=3)
+    pool, borders, n_borders = _pool_setup(x)
+    loss = make_loss("rmse")
+
+    _, hist = GBDTTrainer(loss, PARAMS).fit_pool(
+        pool, y, borders=borders, n_borders=n_borders)
+    delta = hist["dispatch_delta"]
+    assert delta.get("binarize", 0) == 0
+    assert delta.get("histogram", 0) <= PARAMS.depth
+    # warmed refit: identical shapes => no new histogram traces
+    _, hist2 = GBDTTrainer(loss, PARAMS).fit_pool(
+        pool, y, borders=borders, n_borders=n_borders)
+    assert hist2["dispatch_delta"].get("histogram", 0) == 0
+    assert hist2["dispatch_delta"].get("binarize", 0) == 0
+
+
+def test_pool_fingerprint_guard():
+    x, y = _data()
+    pool, borders, _ = _pool_setup(x)
+    other_borders, _ = quantize.compute_borders(x, 8)
+    with pytest.raises(ValueError, match="different schema"):
+        GBDTTrainer(make_loss("rmse"), PARAMS).fit_pool(
+            pool, y, borders=other_borders)
+
+
+def test_serve_handoff_exact():
+    """The fitted ensemble round-trips through Predictor.build to EXACT
+    parity with the trainer's reported training-time predictions, and
+    GBDTServer serves it directly."""
+    x, y = _data(seed=5)
+    pool, borders, n_borders = _pool_setup(x)
+    loss = make_loss("rmse")
+    ens, hist = GBDTTrainer(loss, PARAMS).fit_pool(
+        pool, y, borders=borders, n_borders=n_borders)
+
+    plan = Predictor.build(ens, strategy="staged", layout="soa")
+    served = np.asarray(plan.raw(pool))
+    np.testing.assert_array_equal(served, hist["final_raw"])
+
+    server = GBDTServer(ens, strategy="staged", backend="ref",
+                        max_batch=64)
+    try:
+        assert server.schema_fingerprint == pool.fingerprint
+        proba = server.predict_pool(pool)
+        want = np.asarray(proba_from_raw(jnp.asarray(hist["final_raw"]),
+                                         ens.n_outputs))
+        np.testing.assert_allclose(proba, want, rtol=1e-5, atol=1e-5)
+    finally:
+        server.close()
+
+
+def test_fit_source_matches_fit_pool():
+    """Out-of-core streamed ingest (multi-chunk) trains the same model
+    as in-core pool training: the reservoir border pass is exact when
+    the source fits the sample budget, and chunked binarize is
+    row-wise deterministic."""
+    from repro.scoring import sources as sources_lib
+
+    source = sources_lib.SyntheticSource("covertype", scale=0.003,
+                                         split="train", repeat=2)
+    ds = source.dataset
+    y = np.tile(np.asarray(ds.y_train), 2)[:source.n_rows]
+    loss = make_loss(ds.loss, n_classes=ds.n_classes)
+    params = boosting.BoostingParams(n_trees=4, depth=3, max_bins=16,
+                                     seed=0)
+
+    chunk = 256
+    assert source.n_rows > chunk       # genuinely multi-chunk
+    tr_s = GBDTTrainer(loss, params)
+    ens_s, hist_s = tr_s.fit_source(source, y, chunk_rows=chunk)
+    assert hist_s["n_chunks"] > 1
+    assert tr_s.metrics.snapshot()["n_chunks"] > 1
+
+    # in-core reference: same rows materialized at once
+    x_full = np.tile(np.asarray(ds.x_train, np.float32),
+                     (2, 1))[:source.n_rows]
+    borders, n_borders = quantize.compute_borders(x_full,
+                                                  params.max_bins)
+    pool = quantize.quantize_pool(jnp.asarray(x_full), borders)
+    ens_p, _ = GBDTTrainer(loss, params).fit_pool(
+        pool, y, borders=borders, n_borders=n_borders)
+
+    np.testing.assert_array_equal(np.asarray(ens_s.split_features),
+                                  np.asarray(ens_p.split_features))
+    np.testing.assert_array_equal(np.asarray(ens_s.split_bins),
+                                  np.asarray(ens_p.split_bins))
+    np.testing.assert_array_equal(np.asarray(ens_s.leaf_values),
+                                  np.asarray(ens_p.leaf_values))
+
+
+def test_metrics_snapshot():
+    """TrainingMetrics reports the shared serving vocabulary: pinned
+    key set, rows_per_s in trained sample-rows, stage fractions that
+    partition busy time."""
+    x, y = _data()
+    pool, borders, n_borders = _pool_setup(x)
+    tr = GBDTTrainer(make_loss("rmse"), PARAMS, name="snap-test")
+    tr.fit_pool(pool, y, borders=borders, n_borders=n_borders)
+    snap = tr.metrics.snapshot()
+
+    assert set(snap) == {
+        "model", "iterations", "rows_trained", "rows_per_s",
+        "iter_p50_ms", "iter_p99_ms", "hist_p50_ms", "split_p50_ms",
+        "leaf_p50_ms", "hist_frac", "split_frac", "leaf_frac",
+        "first_train_loss", "final_train_loss", "quantize_s",
+        "n_chunks", "chunk_rows", "hist_dispatches",
+    }
+    assert snap["model"] == "snap-test"
+    assert snap["iterations"] == PARAMS.n_trees
+    assert snap["rows_trained"] == PARAMS.n_trees * len(x)
+    assert snap["rows_per_s"] > 0
+    for frac in ("hist_frac", "split_frac", "leaf_frac"):
+        assert 0.0 <= snap[frac] <= 1.0
+    assert (snap["hist_frac"] + snap["split_frac"] + snap["leaf_frac"]
+            <= 1.0 + 1e-6)
+    assert snap["final_train_loss"] < snap["first_train_loss"]
+    assert snap["hist_dispatches"] <= PARAMS.depth
+
+
+def test_empty_metrics_snapshot():
+    snap = TrainingMetrics("idle").snapshot()
+    assert snap["iterations"] == 0
+    assert snap["rows_per_s"] == 0
+    assert np.isnan(snap["final_train_loss"])

@@ -43,6 +43,14 @@ echo "== differential kernel harness (full registry capability matrix) =="
 # kernel/oracle divergence is named before the broader suite output
 python -m pytest -x -q tests/test_differential.py
 
+echo "== kernel contract checker (static capability/dtype/VMEM lints) =="
+# abstract-traces the full registry matrix (no execution, no compiles)
+# and fails on any unsuppressed contract violation: uint8 widening,
+# bitpacked float excursions, VMEM working sets past the tuning
+# models, plan transfer/retrace hygiene, capability claims.
+# --no-write keeps the committed results/analysis/ artifact.
+python -m repro.launch.analyze --check --no-write >/dev/null
+
 echo "== kernel registry smoke (introspection surface) =="
 python -c "from repro.kernels import registry; rows = registry.table(); \
   assert all(any(r['op'] == op for r in rows) for op in registry.CORE_OPS); \

@@ -1,0 +1,20 @@
+"""Static contract checking for the kernel registry.
+
+Abstractly traces every (op × impl × layout × bin-dtype) capability
+claim in `repro.kernels.registry` with `jax.make_jaxpr` — nothing is
+executed or compiled — and lints the jaxprs for the contracts the
+paper's vectorization depends on: uint8 widening discipline, the
+bitpacked integer pipeline, VMEM working sets vs the tuning footprint
+models, plan-entry transfer/retrace hygiene, and registry capability
+consistency.  `python -m repro.launch.analyze` is the CLI;
+docs/analysis.md documents the rules.
+"""
+from repro.analysis.checker import run_check
+from repro.analysis.matrix import Cell, enumerate_cells
+from repro.analysis.report import (ContractReport, Finding, RULES,
+                                   default_report_path,
+                                   parse_suppressions)
+
+__all__ = ["run_check", "Cell", "enumerate_cells", "ContractReport",
+           "Finding", "RULES", "default_report_path",
+           "parse_suppressions"]

@@ -1,0 +1,197 @@
+"""The contract checker: run every pass over the capability matrix.
+
+`run_check()` is the one entry point (`repro.launch.analyze` is its
+CLI).  Flow:
+
+  1. enumerate cells from `registry.table()` and abstract-trace each
+     (matrix.trace_cell; module-level cache collapses layout-identical
+     calls);
+  2. lint every trace (widening, int-pipeline, VMEM audit);
+  3. capability negatives: `resolve` must reject or re-route every
+     (layout, dtype) an implementation does NOT claim;
+  4. plan walk: `Predictor.trace_entries` + transfer/retrace lints;
+  5. tuning consistency: chunk planner and layout-cost model audits;
+  6. apply declared suppressions, flag unused ones, derive the
+     per-impl `verified` verdict map the registry table displays.
+
+Filters (`ops_filter`, `impls_filter`, `include_plan`,
+`include_tuning`) narrow a run for tests; unused-suppression detection
+only runs on unfiltered matrices (a narrowed run cannot know a
+suppression is stale).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.kernels import registry
+from repro.analysis import matrix, passes
+from repro.analysis.report import ContractReport, Finding, \
+    parse_suppressions
+
+
+def _trace_cell_findings(cell: matrix.Cell) -> tuple[list[Finding], int]:
+    """All per-cell findings + pallas kernels audited."""
+    try:
+        traces = matrix.trace_cell(cell)
+    except Exception as e:  # declared combo must trace — this is the claim
+        return [Finding(rule="capability", op=cell.op, impl=cell.impl,
+                        layout=cell.layout, dtype=cell.dtype,
+                        message=f"declared combo failed to trace: "
+                                f"{type(e).__name__}: {e}")], 0
+    findings: list[Finding] = []
+    kernels = 0
+    for closed in traces:
+        findings += passes.widening_lint(cell, closed)
+        findings += passes.integer_pipeline_lint(cell, closed)
+        vmem, n = passes.vmem_audit(cell, closed)
+        findings += vmem
+        kernels += n
+    return findings, kernels
+
+
+def _capability_negatives(rows: list[dict]) -> list[Finding]:
+    """Every (layout, dtype) an impl does NOT claim must be rejected by
+    `resolve` — or routed to a sibling that does claim it.  The
+    universe per op is what its impls collectively claim (plus the
+    other ops' layouts: an impl must also reject layouts its op has
+    never heard of)."""
+    out: list[Finding] = []
+    all_rows = registry.table()
+    universe_lay = {l for r in all_rows for l in r["layouts"].split("/")}
+    universe_dt = {d for r in all_rows for d in r["dtypes"].split("/")}
+    for row in rows:
+        op, name = row["op"], row["impl"]
+        claimed_lay = set(row["layouts"].split("/"))
+        claimed_dt = set(row["dtypes"].split("/"))
+        for lay in sorted(universe_lay - claimed_lay):
+            try:
+                resolved = registry.resolve(op, name, layout=lay)
+            except (ValueError, KeyError):
+                continue
+            if resolved == name:
+                out.append(Finding(
+                    rule="capability", op=op, impl=name, layout=lay,
+                    message=f"resolve accepted undeclared layout "
+                            f"{lay!r} without re-routing"))
+        for dt in sorted(universe_dt - claimed_dt):
+            try:
+                resolved = registry.resolve(op, name, dtype=dt)
+            except (ValueError, KeyError):
+                continue
+            if resolved == name:
+                out.append(Finding(
+                    rule="capability", op=op, impl=name, dtype=dt,
+                    message=f"resolve accepted undeclared dtype "
+                            f"{dt!r} without re-routing"))
+    return out
+
+
+def _plan_findings(batch_sizes: Sequence[int]) -> list[Finding]:
+    """Walk a canonical plan's entries per strategy (staged exercises
+    the kernel pipeline entry-by-entry, fused the single-kernel path)
+    and lint each abstract trace.  Also asserts the walk itself kept
+    the no-compile contract: stats()['traces'] must stay empty."""
+    from repro.core.predictor import Predictor
+
+    ens, _ = matrix.canonical_ensemble()
+    out: list[Finding] = []
+    for strategy in ("staged", "fused"):
+        plan = Predictor.build(ens, strategy=strategy)
+        entries = plan.trace_entries(batch_sizes=batch_sizes)
+        for label, closed in entries.items():
+            for f in passes.entry_findings(f"{strategy}:{label}", closed):
+                out.append(f)
+        stats = plan.stats
+        if stats["total_traces"]:
+            out.append(Finding(
+                rule="trace-error", op="plan", impl=strategy,
+                message=f"trace_entries compiled {stats['traces']} — "
+                        "the plan walk must stay abstract"))
+    return out
+
+
+def _apply_suppressions(findings: list[Finding],
+                        rows: list[dict],
+                        check_unused: bool) -> list[Finding]:
+    """Mark findings covered by declared suppressions; append
+    unused-suppression findings for stale declarations."""
+    declared = {}
+    for row in rows:
+        if row["suppressions"]:
+            declared[(row["op"], row["impl"])] = parse_suppressions(
+                row["suppressions"].split(" ; "))
+    used: set[tuple] = set()
+    for f in findings:
+        rules = declared.get((f.op, f.impl))
+        if rules is not None and f.rule in rules:
+            f.suppressed = True
+            used.add((f.op, f.impl, f.rule))
+    if check_unused:
+        for (op, name), rules in sorted(declared.items()):
+            for rule, reason in sorted(rules.items()):
+                if (op, name, rule) not in used:
+                    findings.append(Finding(
+                        rule="unused-suppression", op=op, impl=name,
+                        message=f"declared suppression {rule!r} "
+                                f"({reason or 'no reason'}) matched no "
+                                "finding — remove it"))
+    return findings
+
+
+def run_check(*, ops_filter: Optional[Sequence[str]] = None,
+              impls_filter: Optional[Sequence[str]] = None,
+              include_plan: bool = True,
+              include_tuning: bool = True,
+              check_unused: Optional[bool] = None,
+              batch_sizes: Sequence[int] = (8,)) -> ContractReport:
+    """Run the full contract check; see the module docstring."""
+    ops_filter = set(ops_filter) if ops_filter is not None else None
+    impls_filter = set(impls_filter) if impls_filter is not None else None
+    filtered = ops_filter is not None or impls_filter is not None
+    if check_unused is None:
+        check_unused = not filtered
+
+    rows = [r for r in registry.table()
+            if (ops_filter is None or r["op"] in ops_filter)
+            and (impls_filter is None
+                 or f"{r['op']}:{r['impl']}" in impls_filter)]
+
+    before = matrix.cache_stats()
+    cells = matrix.enumerate_cells(ops_filter=ops_filter,
+                                   impls_filter=impls_filter)
+    findings: list[Finding] = []
+    kernels = 0
+    for cell in cells:
+        cell_findings, n = _trace_cell_findings(cell)
+        findings += cell_findings
+        kernels += n
+
+    findings += _capability_negatives(rows)
+    if include_plan:
+        findings += _plan_findings(batch_sizes)
+    if include_tuning:
+        findings += passes.chunk_model_findings()
+        findings += passes.layout_cost_findings()
+
+    findings = _apply_suppressions(findings, rows, check_unused)
+
+    verified: dict[str, str] = {}
+    for row in rows:
+        key = f"{row['op']}:{row['impl']}"
+        mine = [f for f in findings if (f.op, f.impl)
+                == (row["op"], row["impl"])]
+        if any(not f.suppressed for f in mine):
+            verified[key] = "FAIL"
+        elif mine:
+            verified[key] = f"ok ({len(mine)} suppressed)"
+        else:
+            verified[key] = "ok"
+
+    after = matrix.cache_stats()
+    return ContractReport(
+        findings=findings,
+        cells=len(cells),
+        traces=after["misses"] - before["misses"],
+        trace_cache_hits=after["hits"] - before["hits"],
+        kernels=kernels,
+        verified=verified)

@@ -1,0 +1,171 @@
+"""Findings, suppressions and the contract-report artifact.
+
+The contract checker (`repro.analysis.checker`) reduces every lint pass
+to a flat list of `Finding`s.  A finding is addressed to the registry
+implementation it was raised against, so declared suppressions — the
+`suppressions=("rule: reason", ...)` metadata on `registry.register` —
+can be matched mechanically: a finding whose rule appears in its impl's
+suppression list is demoted to *suppressed* (reported, never fatal),
+and a suppression that matches no finding at all is itself a finding
+(`unused-suppression`), so stale exceptions cannot linger.
+
+The JSON artifact (results/analysis/contract-report.json) is committed
+like the results/perf trajectories: deterministic (no timestamps), so a
+diff shows exactly which claims changed verdict.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any, Iterable, Optional
+
+# Rule catalog — docs/analysis.md documents each in prose.
+RULES: dict[str, str] = {
+    "widening": "uint8 bins/comparison panel promoted to a wider dtype "
+                "outside the sanctioned dot_general/gather contract",
+    "int-pipeline": "bitpacked leaf-index pipeline converted an integer "
+                    "value to float before the leaf gather",
+    "vmem-model": "traced kernel working set exceeds its kernels.tuning "
+                  "footprint model (the block tuner would mis-plan)",
+    "vmem-budget": "traced kernel working set exceeds VMEM_BUDGET",
+    "capability": "registry capability claim diverges from behavior "
+                  "(declared combo fails to trace, or an undeclared "
+                  "combo is not rejected by resolve)",
+    "transfer": "plan entry stages a host<->device transfer or a large "
+                "non-donated buffer",
+    "retrace": "plan entry admits avals (weak types, x64 leaks) that "
+               "would retrace beyond the compile contract",
+    "chunk-model": "best_chunk_rows plans a chunk whose working set "
+                   "breaks CHUNK_BUDGET_BYTES or the pow2/clamp contract",
+    "layout-cost": "layout_costs diverges from the bytes actually "
+                   "lowered (the layout selector would mis-rank)",
+    "unused-suppression": "declared suppression matched no finding",
+    "trace-error": "internal: a lint pass itself failed on a trace",
+}
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation, addressed to a registry implementation
+    (`op:impl` — plan-level findings use op="plan", impl=entry name)."""
+    rule: str
+    op: str
+    impl: str
+    layout: str = ""
+    dtype: str = ""
+    message: str = ""
+    suppressed: bool = False
+
+    @property
+    def cell(self) -> str:
+        tail = "/".join(p for p in (self.layout, self.dtype) if p)
+        return f"{self.op}:{self.impl}" + (f" [{tail}]" if tail else "")
+
+    def format(self) -> str:
+        mark = "suppressed" if self.suppressed else "FAIL"
+        return f"{mark:10s} {self.rule:18s} {self.cell}: {self.message}"
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict[str, Any]) -> "Finding":
+        return cls(**d)
+
+
+def parse_suppressions(entries: Iterable[str]) -> dict[str, str]:
+    """("rule: reason", ...) -> {rule: reason}.  A bare "rule" (no
+    colon) suppresses with an empty reason; unknown rule names raise —
+    a typo in a suppression must not silently disable nothing."""
+    out: dict[str, str] = {}
+    for entry in entries:
+        rule, _, reason = entry.partition(":")
+        rule = rule.strip()
+        if rule not in RULES:
+            raise ValueError(f"unknown suppression rule {rule!r} in "
+                             f"{entry!r}; known: {sorted(RULES)}")
+        out[rule] = reason.strip()
+    return out
+
+
+def _repo_root() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def default_report_path() -> pathlib.Path:
+    return _repo_root() / "results" / "analysis" / "contract-report.json"
+
+
+@dataclasses.dataclass
+class ContractReport:
+    """The checker's full output: findings + coverage counters + the
+    per-impl verdict map the registry's `verified` column displays."""
+    findings: list[Finding]
+    cells: int = 0                 # capability-matrix cells enumerated
+    traces: int = 0                # unique abstract traces linted
+    trace_cache_hits: int = 0      # cells served from the trace cache
+    kernels: int = 0               # pallas kernel bodies audited
+    verified: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def unsuppressed(self) -> list[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def suppressed(self) -> list[Finding]:
+        return [f for f in self.findings if f.suppressed]
+
+    @property
+    def ok(self) -> bool:
+        return not self.unsuppressed
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "schema": 1,
+            "cells": self.cells,
+            "traces": self.traces,
+            "trace_cache_hits": self.trace_cache_hits,
+            "kernels": self.kernels,
+            "unsuppressed_count": len(self.unsuppressed),
+            "suppressed_count": len(self.suppressed),
+            "verified": dict(sorted(self.verified.items())),
+            "findings": [f.to_json() for f in self.findings],
+        }
+
+    def save(self, path: Optional[pathlib.Path] = None) -> pathlib.Path:
+        path = pathlib.Path(path) if path else default_report_path()
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=2,
+                                   sort_keys=False) + "\n",
+                        encoding="utf-8")
+        return path
+
+    @classmethod
+    def load(cls, path: Optional[pathlib.Path] = None) -> "ContractReport":
+        path = pathlib.Path(path) if path else default_report_path()
+        d = json.loads(path.read_text(encoding="utf-8"))
+        return cls(findings=[Finding.from_json(f) for f in d["findings"]],
+                   cells=d.get("cells", 0), traces=d.get("traces", 0),
+                   trace_cache_hits=d.get("trace_cache_hits", 0),
+                   kernels=d.get("kernels", 0),
+                   verified=dict(d.get("verified", {})))
+
+    def format(self, verbose: bool = False) -> str:
+        lines = [
+            f"contract check: {self.cells} cells, {self.traces} traces "
+            f"({self.trace_cache_hits} cache hits), "
+            f"{self.kernels} pallas kernels audited",
+            f"findings: {len(self.unsuppressed)} unsuppressed, "
+            f"{len(self.suppressed)} suppressed",
+        ]
+        shown = self.findings if verbose else self.unsuppressed
+        lines += ["  " + f.format() for f in shown]
+        if not verbose and self.suppressed:
+            lines.append(f"  ({len(self.suppressed)} suppressed findings "
+                         "hidden; -v shows them)")
+        fails = sorted(k for k, v in self.verified.items() if v == "FAIL")
+        if fails:
+            lines.append("failing impls: " + ", ".join(fails))
+        lines.append("RESULT: " + ("OK" if self.ok else "FAIL"))
+        return "\n".join(lines)

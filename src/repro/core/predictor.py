@@ -254,6 +254,12 @@ class Predictor:
         # shard_map hold tracer borders, which cannot be hashed (and
         # never score pools).
         self._schema_fingerprint: Optional[str] = None
+        # Abstract (make_jaxpr) traces per (entry, shape, dtype, schema
+        # fingerprint) — the contract checker walks every plan entry,
+        # and walking must never compile (the jitted entries each tick
+        # an XLA compile) nor re-trace an entry it already walked.
+        self._abstract_traces: dict[tuple, Any] = {}
+        self._abstract_trace_misses = 0
         self._entries = {
             "raw": self._make_entry("raw", self._raw_impl),
             "proba": self._make_entry("proba", self._proba_impl),
@@ -530,6 +536,66 @@ class Predictor:
         return fn
 
     # -- introspection -----------------------------------------------------
+    def trace_entries(self, batch_sizes: Sequence[int] = (8,),
+                      entries: Optional[Sequence[str]] = None
+                      ) -> dict[str, Any]:
+        """Abstract traces (ClosedJaxprs) of the plan's entry points —
+        the surface the contract checker's transfer/retrace lints walk.
+
+        Traces the *un-jitted* impl methods with `jax.make_jaxpr` over
+        ShapeDtypeStructs: nothing is compiled, `stats['traces']` does
+        not tick, and repeat walks of the same (entry, batch shape)
+        under the same quantization schema are served from a cache
+        keyed like `QuantizedPool` scoring — on the borders
+        fingerprint — so a re-lowered plan with identical borders
+        reuses its traces.  Returns {"<entry>@<batch>": ClosedJaxpr}.
+
+        Pool entries and `quantize` are skipped automatically when the
+        ensemble exceeds the uint8 bin budget (they would raise at
+        runtime too); pass `entries` to pin an explicit list."""
+        self._ensure_prepared()
+        impls: dict[str, tuple[Callable, Any]] = {
+            "raw": (self._raw_impl, jnp.float32),
+            "proba": (self._proba_impl, jnp.float32),
+            "classify": (self._classify_impl, jnp.float32),
+            "raw_pool": (self._pool_raw_impl, jnp.uint8),
+            "proba_pool": (self._pool_proba_impl, jnp.uint8),
+            "classify_pool": (self._pool_classify_impl, jnp.uint8),
+            "quantize": (self._quantize_impl, jnp.float32),
+        }
+        if entries is None:
+            names = list(impls)
+            if self.ensemble.borders.shape[0] > MAX_BINS - 1:
+                names = [n for n in names
+                         if not n.endswith("_pool") and n != "quantize"]
+        else:
+            unknown = sorted(set(entries) - set(impls))
+            if unknown:
+                raise KeyError(f"unknown plan entries {unknown}; "
+                               f"known: {sorted(impls)}")
+            names = list(entries)
+        fingerprint = self.schema_fingerprint
+        out: dict[str, Any] = {}
+        for name in names:
+            impl, dtype = impls[name]
+            for n in batch_sizes:
+                aval = jax.ShapeDtypeStruct(
+                    (int(n), self.ensemble.n_features), dtype)
+                key = (name, aval.shape, str(aval.dtype), fingerprint)
+                with self._lock:
+                    closed = self._abstract_traces.get(key)
+                if closed is None:
+                    # trace outside the lock (tracing is slow and
+                    # reentrant-safe); first writer wins
+                    traced = jax.make_jaxpr(impl)(aval)
+                    with self._lock:
+                        closed = self._abstract_traces.setdefault(
+                            key, traced)
+                        if closed is traced:
+                            self._abstract_trace_misses += 1
+                out[f"{name}@{int(n)}"] = closed
+        return out
+
     @property
     def stats(self) -> dict[str, Any]:
         """Plan-cache telemetry: XLA traces per entry point, distinct
@@ -546,6 +612,8 @@ class Predictor:
                 "layout": self.config.layout,
                 "lower_time_s": self._lower_time_s,
                 "build_model_pads": self._build_model_pads,
+                "abstract_traces": len(self._abstract_traces),
+                "abstract_trace_misses": self._abstract_trace_misses,
             }
 
     def describe(self) -> dict[str, Any]:

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.leaf_index import _bp_compare_planes
+
 
 def _fused_kernel(x_ref, borders_ref, sf_ref, sb_ref, lv_ref, out_ref,
                   bins_scratch, *, n_borders: int):
@@ -242,7 +244,7 @@ def _fused_bp_kernel(x_ref, borders_ref, sf_ref, sb_ref, lv_ref, out_ref,
             0, n_borders, body,
             jnp.zeros(x.shape, jnp.int32)).astype(bins_scratch.dtype)
 
-    bins = bins_scratch[...].astype(jnp.int32)       # (bn, F) — stays integer
+    bins = bins_scratch[...]                         # (bn, F) — stays integer
     sf = sf_ref[...]                                 # (D, bt) int32
     sb = sb_ref[...]                                 # (D, bt) int32
     lv = lv_ref[...]                                 # (bt, L, C)
@@ -254,12 +256,23 @@ def _fused_bp_kernel(x_ref, borders_ref, sf_ref, sb_ref, lv_ref, out_ref,
     # Per depth the comparison is one bit per doc; 32-doc columns pack
     # into uint32 lane words and the index register accumulates bit d
     # with shift/or — integers end to end, no one-hot materialization.
+    # A uint8 bins scratch (<= 255 borders) also compares unwidened:
+    # thresholds narrow to uint8 with the PAD_SPLIT_BIN sentinel kept
+    # as a mask (see leaf_index._bp_compare_planes), so the panel is
+    # never upcast to int32.
+    narrow = bins.dtype == jnp.uint8
+    if narrow:
+        sb_u8, live = _bp_compare_planes(sb)
     w = bn // 32
     shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 32, bt), 1)
     idx = jnp.zeros((bn, bt), jnp.int32)
     for d in range(D):                               # static unroll over depth
         cols = jnp.take(bins, sf[d], axis=1)         # (bn, bt) integer gather
-        bit = (cols >= sb[d][None, :]).astype(jnp.uint32)
+        if narrow:
+            go = (cols >= sb_u8[d][None, :]) & live[d][None, :]
+        else:
+            go = cols >= sb[d][None, :]
+        bit = go.astype(jnp.uint32)
         words = jnp.sum(bit.reshape(w, 32, bt) << shifts, axis=1,
                         dtype=jnp.uint32)            # (w, bt) lane words
         plane = ((words[:, None, :] >> shifts) & jnp.uint32(1)

@@ -134,24 +134,48 @@ def leaf_index_dm(bins: jax.Array, onehot: jax.Array, split_bins_dm: jax.Array,
     )(bins, onehot, split_bins_dm, pow2)
 
 
+def _bp_compare_planes(sb):
+    """Narrow the (D, bt) int32 threshold planes for a uint8 compare.
+
+    Real split thresholds on a uint8 pool are <= 255 (bin ids fit one
+    byte), so the compare can run unwidened in uint8 — the paper's
+    vmsgeu on the byte stream.  The PAD_SPLIT_BIN sentinel (2^30, used
+    for padded trees and truncated depths) means "never go right"; it
+    survives the narrowing as an explicit liveness mask, NOT by
+    widening the bins panel to int32 (which would 4x the VMEM the
+    panel holds — the contract checker's working-set audit pins this).
+    """
+    live = sb <= 255                       # (D, bt) bool: real splits
+    return sb.astype(jnp.uint8), live
+
+
 def _leaf_index_bp_kernel(bins_ref, sf_ref, sb_ref, out_ref):
     # Bitpacked lowered layout: integer-only pipeline, the closest TPU
     # analog of the paper's RVV loop.  Per depth d the comparison
     # bins[n, sf[d, t]] >= sb[d, t] is ONE bit per doc; a 32-doc column
     # packs into a uint32 lane word (the vmsgeu mask register) and the
     # leaf-index register accumulates bit d via shift/or.  No MXU, no
-    # one-hot materialization, no float arithmetic anywhere.
-    bins = bins_ref[...].astype(jnp.int32)            # (bn, F)
+    # one-hot materialization, no float arithmetic anywhere — and for
+    # uint8 pool bins the panel is never widened either: the compare
+    # runs in uint8 against the narrowed threshold planes.
+    bins = bins_ref[...]                              # (bn, F) i32 | u8
     sf = sf_ref[...]                                  # (D, bt) int32
     sb = sb_ref[...]                                  # (D, bt) int32
     D, bt = sf.shape
     bn = bins.shape[0]
     w = bn // 32
+    narrow = bins.dtype == jnp.uint8
+    if narrow:
+        sb_u8, live = _bp_compare_planes(sb)
     shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 32, bt), 1)
     idx = jnp.zeros((bn, bt), jnp.int32)
     for d in range(D):                                # static unroll over depth
         cols = jnp.take(bins, sf[d], axis=1)          # (bn, bt) integer gather
-        bit = (cols >= sb[d][None, :]).astype(jnp.uint32)
+        if narrow:
+            go = (cols >= sb_u8[d][None, :]) & live[d][None, :]
+        else:
+            go = cols >= sb[d][None, :]
+        bit = go.astype(jnp.uint32)
         # pack 32-doc lanes into uint32 words: bits are disjoint per
         # lane position, so the shifted sum IS the bitwise OR
         words = jnp.sum(bit.reshape(w, 32, bt) << shifts, axis=1,
@@ -175,7 +199,8 @@ def leaf_index_bp(bins: jax.Array, split_features_bp: jax.Array,
     N % block_n == 0 (block_n a multiple of 32 so doc lanes fill whole
     uint32 words), T % block_t == 0, padded trees carry split_bins >
     max bin (they pack bit 0 at every depth -> leaf 0).  `bins` may be
-    int32 or uint8 — the integer compare serves both streams.
+    int32 or uint8 — uint8 compares unwidened against the narrowed
+    threshold planes (see `_bp_compare_planes`), int32 directly.
     """
     N, F = bins.shape
     D, T = split_features_bp.shape

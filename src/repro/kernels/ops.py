@@ -194,9 +194,22 @@ def _binarize_pallas_u8(x, borders, *, block_n=256, block_f=128,
 # --------------------------------------------------------------------------
 # Registered implementations: leaf_index
 # --------------------------------------------------------------------------
+# Declared widening exception (PR 6's depth_grouped-on-uint8 audit):
+# the jnp oracle's `gathered >= split_bins` promotes the gathered uint8
+# panel to int32 (XLA type promotion against the int32 split_bins).
+# Cost: a transient (N, T, D) int32 comparison panel instead of uint8 —
+# acceptable for the clarity-first oracle, where XLA:CPU fuses the
+# widening into the compare and no VMEM contract applies.  The
+# production uint8 paths (pallas_u8 one-hot contract, ref_bp/pallas_bp
+# narrowed-threshold compare) stay unwidened and unsuppressed.
 @registry.register("leaf_index", "ref", dtypes=("int32", "uint8"),
                    layouts=SOA_LAYOUTS,
-                   constraints="any shape; bins int32 or uint8")
+                   constraints="any shape; bins int32 or uint8",
+                   suppressions=(
+                       "widening: jnp oracle promotes the gathered "
+                       "panel to int32 by comparison against int32 "
+                       "split_bins; clarity-first oracle, no VMEM "
+                       "contract (depth_grouped routes here too)",))
 def _leaf_index_ref(bins, sf, sb, *, prepadded=False, **_blocks):
     return _ref.leaf_index(bins, sf, sb)
 
@@ -509,9 +522,19 @@ def _fused_pallas_bp(x, borders, sf_bp, sb_bp, lv, *, block_n=None,
 # --------------------------------------------------------------------------
 # Layout-independent like binarize: the inputs carry no lowered model
 # structure, only the feature-major bin stream and per-sample stats.
+# Declared widening exception: the segment-sum oracle widens pool bins
+# to int32 segment ids (`leaf * n_bins + bins`) — the exact shape of
+# the PR-7 histogram bug, intentional here because the oracle optimizes
+# for clarity over bandwidth (histogram.histogram_ref's docstring).
+# The production uint8 path is histogram:pallas_u8, which compares the
+# byte stream unwidened and carries no suppression.
 @registry.register("histogram", "ref", dtypes=("int32", "uint8"),
                    layouts=ALL_LAYOUTS,
-                   constraints="any shape; segment-sum oracle")
+                   constraints="any shape; segment-sum oracle",
+                   suppressions=(
+                       "widening: segment-sum oracle forms int32 "
+                       "segment ids from pool bins; benign oracle "
+                       "clarity (production u8 path is pallas_u8)",))
 def _histogram_ref(bins_t, leaf, g, *, n_bins, n_leaves, **_blocks):
     return _hist_k.histogram_ref(bins_t, leaf, g, n_bins=n_bins,
                                  n_leaves=n_leaves)

@@ -53,6 +53,13 @@ class KernelImpl:
     platforms: tuple[str, ...]         # production-fit platforms
     layouts: tuple[str, ...]           # physical model layouts it consumes
     constraints: str                   # human-readable constraint note
+    # Declared contract-checker exceptions, "<rule>: <reason>" each (see
+    # repro.analysis / docs/analysis.md).  An intentional deviation from
+    # a lint rule is suppressed HERE, next to the capability claims it
+    # qualifies — never silently inside the checker.  The checker flags
+    # suppressions that no longer match any finding, so stale entries
+    # cannot linger.
+    suppressions: tuple[str, ...] = ()
 
 
 _REGISTRY: dict[str, dict[str, KernelImpl]] = {}
@@ -71,7 +78,8 @@ def register(op: str, name: str, *, family: Optional[str] = None,
              dtypes: tuple[str, ...] = ("int32",),
              platforms: tuple[str, ...] = ("cpu", "tpu"),
              layouts: tuple[str, ...] = ("soa",),
-             constraints: str = "") -> Callable:
+             constraints: str = "",
+             suppressions: tuple[str, ...] = ()) -> Callable:
     """Decorator: register `fn` as implementation `name` of `op`.
 
     `layouts` names the physical model layouts (see `repro.core.layout`)
@@ -95,9 +103,24 @@ def register(op: str, name: str, *, family: Optional[str] = None,
             family=family or ("pallas" if name.startswith("pallas")
                               else "ref"),
             dtypes=tuple(dtypes), platforms=tuple(platforms),
-            layouts=tuple(layouts), constraints=constraints)
+            layouts=tuple(layouts), constraints=constraints,
+            suppressions=tuple(suppressions))
         return fn
     return deco
+
+
+def unregister(op: str, name: str) -> None:
+    """Remove a registered implementation.
+
+    For test fixtures only: lets a deliberately-broken toy impl be
+    registered against the contract checker and cleaned up without
+    leaking into later tests.  Unknown (op, name) raises KeyError."""
+    impls = _REGISTRY.get(op)
+    if impls is None or name not in impls:
+        raise KeyError(f"kernel impl {op}:{name} not registered")
+    del impls[name]
+    if not impls:
+        del _REGISTRY[op]
 
 
 def ops() -> list[str]:
@@ -235,16 +258,43 @@ def table() -> list[dict[str, str]]:
                 "platforms": "/".join(impl.platforms),
                 "layouts": "/".join(impl.layouts),
                 "constraints": impl.constraints,
+                "suppressions": " ; ".join(impl.suppressions),
             })
     return rows
 
 
-def format_table() -> str:
+def load_verified() -> dict[str, str]:
+    """Per-implementation verdicts ("op:impl" -> "ok"/"FAIL"/...) from
+    the contract checker's last committed report
+    (results/analysis/contract-report.json).  Missing or unreadable
+    report -> {} (the verified column renders "-")."""
+    import json
+    import pathlib
+    path = (pathlib.Path(__file__).resolve().parents[3]
+            / "results" / "analysis" / "contract-report.json")
+    try:
+        with open(path, encoding="utf-8") as f:
+            verified = json.load(f).get("verified", {})
+    except (OSError, ValueError):
+        return {}
+    return {str(k): str(v) for k, v in verified.items()}
+
+
+def format_table(verified: Optional[dict[str, str]] = None) -> str:
     """`table()` rendered as a markdown table (docs/api.md embeds the
-    output of this function; `launch.serve --show-kernels` prints it)."""
+    output of this function; `launch.serve --show-kernels` prints it).
+
+    The `verified` column carries the contract checker's per-impl
+    verdict (`repro.launch.analyze`); by default it is sourced from the
+    checker's last committed report via `load_verified()`.  Pass a dict
+    to override, or `{}` to render the column blank."""
+    if verified is None:
+        verified = load_verified()
     rows = table()
+    for r in rows:
+        r["verified"] = verified.get(f"{r['op']}:{r['impl']}", "-")
     cols = ("op", "impl", "family", "dtypes", "platforms", "layouts",
-            "constraints")
+            "verified", "constraints")
     widths = {c: max(len(c), *(len(r[c]) for r in rows)) for c in cols}
     def line(vals):
         return "| " + " | ".join(v.ljust(widths[c])

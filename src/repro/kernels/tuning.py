@@ -33,20 +33,41 @@ def _align_score(*dims: int) -> float:
 def binarize_footprint(block_n: int, block_f: int, n_borders: int, *,
                        bins_bytes: int = 4) -> int:
     """`bins_bytes=1` models the uint8 bin stream (quantized pool /
-    u8 fused scratch): the output panel shrinks 4x."""
+    u8 fused scratch): the output panel shrinks 4x.  The compare-add
+    loop accumulates in int32 regardless of the stored dtype, so the
+    (block_n, block_f) accumulator is always counted at 4 bytes (the
+    static analyzer's live-buffer estimate checks this model against
+    the traced kernel)."""
     x = block_n * block_f * 4
     borders = n_borders * block_f * 4
+    acc = block_n * block_f * 4
     out = block_n * block_f * bins_bytes
-    return x + borders + out
+    return x + borders + acc + out
 
 
 def leaf_index_footprint(block_n: int, block_t: int, F: int, D: int, *,
-                         bins_bytes: int = 4) -> int:
+                         bins_bytes: int = 4,
+                         gather: str = "mxu") -> int:
+    """`gather` names the index-assembly pipeline the kernel runs:
+
+      mxu       one-hot matmul gather — the kernel holds an f32 working
+                copy of the bins panel for the systolic pass (exact for
+                bin ids <= 255), plus the one-hot and gathered panels
+      bitplane  integer shift/or assembly (the bitpacked layout): no
+                one-hot, no f32 upcast — the working set past the
+                resident bins panel is the per-depth (block_n, block_t)
+                column/mask/plane panels and the index register
+    """
     bins = block_n * F * bins_bytes
+    out = block_n * block_t * 4
+    if gather == "bitplane":
+        depth_panels = block_n * block_t * (bins_bytes + 4 + 4)
+        idx = block_n * block_t * 4
+        return bins + depth_panels + idx + out
+    upcast = block_n * F * 4
     onehot = block_t * D * F * 4
     gathered = block_t * D * block_n * 4
-    out = block_n * block_t * 4
-    return bins + onehot + gathered + out
+    return bins + upcast + onehot + gathered + out
 
 
 def leaf_gather_footprint(block_n: int, block_t: int, L: int, C: int) -> int:
@@ -58,13 +79,16 @@ def leaf_gather_footprint(block_n: int, block_t: int, L: int, C: int) -> int:
 
 
 def fused_footprint(block_n: int, block_t: int, F: int, D: int, L: int,
-                    C: int, n_borders: int, *, bins_bytes: int = 4) -> int:
+                    C: int, n_borders: int, *, bins_bytes: int = 4,
+                    gather: str = "mxu") -> int:
     """`bins_bytes=1` models the u8 bins scratch the fused kernel uses
-    when the ensemble fits 255 borders (ops.py picks it automatically)."""
+    when the ensemble fits 255 borders (ops.py picks it automatically);
+    `gather="bitplane"` models the bitpacked fused kernel's integer
+    stage-2 (see `leaf_index_footprint`)."""
     return (binarize_footprint(block_n, F, n_borders,
                                bins_bytes=bins_bytes)
             + leaf_index_footprint(block_n, block_t, F, D,
-                                   bins_bytes=bins_bytes)
+                                   bins_bytes=bins_bytes, gather=gather)
             + leaf_gather_footprint(block_n, block_t, L, C))
 
 

@@ -1,0 +1,73 @@
+"""Kernel contract checker CLI.
+
+    python -m repro.launch.analyze             # report + write artifact
+    python -m repro.launch.analyze --check     # CI: exit 1 on violations
+    python -m repro.launch.analyze -v          # show suppressed findings
+
+Statically verifies every registry capability claim (see
+`repro.analysis` / docs/analysis.md): abstract-traces the full
+(op × impl × layout × bin-dtype) matrix and lints the jaxprs for
+uint8-widening discipline, the bitpacked integer pipeline, VMEM
+working sets vs the tuning footprint models, plan transfer/retrace
+hygiene and capability consistency.  Nothing is executed or compiled.
+
+By default the run writes results/analysis/contract-report.json — the
+committed artifact `registry.format_table()`'s `verified` column reads.
+`--check --no-write` is the CI mode: verify without touching the tree.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import checker, report as report_mod
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.launch.analyze",
+        description="statically verify kernel registry contracts")
+    p.add_argument("--check", action="store_true",
+                   help="exit 1 if any unsuppressed finding remains")
+    p.add_argument("--no-write", action="store_true",
+                   help="do not write the contract-report.json artifact")
+    p.add_argument("--out", default=None,
+                   help="artifact path (default: results/analysis/"
+                        "contract-report.json)")
+    p.add_argument("--json", action="store_true",
+                   help="print the report as JSON instead of text")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="also show suppressed findings")
+    p.add_argument("--ops", default=None,
+                   help="comma-separated op filter (skips the "
+                        "unused-suppression check)")
+    p.add_argument("--impls", default=None,
+                   help="comma-separated op:impl filter")
+    p.add_argument("--no-plan", action="store_true",
+                   help="skip the Predictor plan-entry walk")
+    p.add_argument("--no-tuning", action="store_true",
+                   help="skip the chunk/layout tuning-model audits")
+    args = p.parse_args(argv)
+
+    result = checker.run_check(
+        ops_filter=args.ops.split(",") if args.ops else None,
+        impls_filter=args.impls.split(",") if args.impls else None,
+        include_plan=not args.no_plan,
+        include_tuning=not args.no_tuning)
+
+    if args.json:
+        print(json.dumps(result.to_json(), indent=2))
+    else:
+        print(result.format(verbose=args.verbose))
+
+    if not args.no_write:
+        path = result.save(args.out)
+        if not args.json:
+            print(f"wrote {path}")
+
+    return 0 if (result.ok or not args.check) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -125,6 +125,13 @@ def main():
         from repro.kernels import registry as kernel_registry
         from repro.kernels import tuning
         print(kernel_registry.format_table())
+        if kernel_registry.load_verified():
+            print("\nverified: contract-checker verdict per impl "
+                  "(results/analysis/contract-report.json; refresh "
+                  "with `python -m repro.launch.analyze`)")
+        else:
+            print("\nverified: no contract report found — run "
+                  "`python -m repro.launch.analyze` to populate")
         print()
         print(layout_mod.format_layout_table())
         # the layout this process would resolve for the requested flag

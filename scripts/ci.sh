@@ -121,4 +121,16 @@ echo "== predictor smoke benchmark (prepared / prequantized / registry / layouts
 # trajectory.
 python -m benchmarks.predictor_bench --quick --check --no-write >/dev/null
 
+echo "== mesh smoke (sharded parity tests + weak-scaling gate) =="
+# row-sharded pool/float predict must match single-device bit-for-bit
+# on every layout with zero binarize dispatches, tree-sharded psum to
+# reassociated-float tolerance, and K x R registry replicas must route;
+# the tests force 4 host devices in their own subprocesses, so no
+# XLA_FLAGS leaks into this shell
+python -m pytest -x -q tests/test_distributed_gbdt.py
+# weak-scaling gate: one subprocess per device count, exact parity at
+# every K and >= 1.5x rows/s at K=4 vs K=1 on the prequantized bulk
+# scenario.  --no-write keeps the committed results/perf/ JSONs.
+python -m benchmarks.mesh_bench --quick --check --no-write >/dev/null
+
 echo "CI OK"

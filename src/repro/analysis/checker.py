@@ -10,6 +10,8 @@ CLI).  Flow:
   3. capability negatives: `resolve` must reject or re-route every
      (layout, dtype) an implementation does NOT claim;
   4. plan walk: `Predictor.trace_entries` + transfer/retrace lints;
+  4b. shard-parity: the sharded entry points abstract-traced over an
+     `AbstractMesh` per layout, linted for gathering collectives;
   5. tuning consistency: chunk planner and layout-cost model audits;
   6. apply declared suppressions, flag unused ones, derive the
      per-impl `verified` verdict map the registry table displays.
@@ -141,6 +143,7 @@ def _apply_suppressions(findings: list[Finding],
 def run_check(*, ops_filter: Optional[Sequence[str]] = None,
               impls_filter: Optional[Sequence[str]] = None,
               include_plan: bool = True,
+              include_shard: bool = True,
               include_tuning: bool = True,
               check_unused: Optional[bool] = None,
               batch_sizes: Sequence[int] = (8,)) -> ContractReport:
@@ -169,6 +172,8 @@ def run_check(*, ops_filter: Optional[Sequence[str]] = None,
     findings += _capability_negatives(rows)
     if include_plan:
         findings += _plan_findings(batch_sizes)
+    if include_shard:
+        findings += passes.shard_parity_findings(batch_sizes)
     if include_tuning:
         findings += passes.chunk_model_findings()
         findings += passes.layout_cost_findings()

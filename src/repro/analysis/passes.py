@@ -289,6 +289,67 @@ def entry_findings(name: str, closed: Any) -> list[Finding]:
 
 
 # --------------------------------------------------------------------------
+# Pass 3b: sharded-entry collective discipline (shard-parity)
+# --------------------------------------------------------------------------
+# Collectives that re-materialize a sharded value on every shard.  The
+# row-sharded predict path owes its weak scaling to each shard touching
+# only its own (N/K, F) panel; an all_gather in the jaxpr means some
+# operation pulled the full panel back — O(N) bytes and O(N) work per
+# shard, i.e. no scaling at all.  `psum` is *expected* (tree-sharded
+# leaf-sum reduction) and reduces, never gathers, so it is not listed.
+GATHERING_COLLECTIVES = frozenset({
+    "all_gather", "all_gather_invariant", "all_to_all", "pgather"})
+
+
+def sharded_entry_findings(name: str, closed: Any) -> list[Finding]:
+    """Lint one sharded plan entry's abstract trace: no gathering
+    collective may appear anywhere in it (sub-jaxprs included — the
+    shard_map body is a sub-jaxpr of the traced entry)."""
+    cell = Cell("plan", name, "", "")
+    out: list[Finding] = []
+    for jaxpr in jt.iter_jaxprs(closed.jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name in GATHERING_COLLECTIVES:
+                out.append(_finding(
+                    cell, "shard-parity",
+                    f"{eqn.primitive.name} of "
+                    f"{jt.aval_short(getattr(eqn.invars[0], 'aval', None))}"
+                    " inside a row-sharded entry — the bins panel must "
+                    "stay shard-local"))
+    return out
+
+
+def shard_parity_findings(batch_sizes: Any = (8,)) -> list[Finding]:
+    """Abstract-trace the sharded entry points of one plan per layout
+    over a device-free `AbstractMesh` and lint each trace for gathering
+    collectives.  Also re-asserts the no-compile contract: the walk
+    must not tick the plans' trace counters (an AbstractMesh cannot be
+    compiled against, so a tick means a sharded entry escaped the
+    abstract path)."""
+    from repro.compat import abstract_mesh
+    from repro.core.predictor import Predictor
+    from repro.analysis.matrix import canonical_ensemble
+
+    mesh = abstract_mesh((4,), ("data",))
+    sizes = [n for n in batch_sizes if n % 4 == 0] or [8]
+    ens, _ = canonical_ensemble()
+    out: list[Finding] = []
+    for lay in ("soa", "depth_major", "depth_grouped", "bitpacked"):
+        plan = Predictor.build(ens, strategy="staged", layout=lay)
+        entries = plan.trace_entries(
+            batch_sizes=sizes, mesh=mesh,
+            entries=("sharded_raw", "sharded_raw_pool"))
+        for label, closed in entries.items():
+            out += sharded_entry_findings(f"{lay}:{label}", closed)
+        if plan.stats["total_traces"]:
+            out.append(Finding(
+                rule="trace-error", op="plan", impl=f"{lay}:sharded",
+                message="sharded trace walk compiled — it must stay "
+                        "abstract (AbstractMesh)"))
+    return out
+
+
+# --------------------------------------------------------------------------
 # Pass 4: tuning-model consistency (chunk planner, layout selector)
 # --------------------------------------------------------------------------
 def chunk_model_findings() -> list[Finding]:

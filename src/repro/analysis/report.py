@@ -34,6 +34,9 @@ RULES: dict[str, str] = {
                   "combo is not rejected by resolve)",
     "transfer": "plan entry stages a host<->device transfer or a large "
                 "non-donated buffer",
+    "shard-parity": "sharded plan entry gathers the row-sharded panel "
+                    "back onto one shard (an all_gather/all_to_all in "
+                    "the jaxpr breaks the weak-scaling contract)",
     "retrace": "plan entry admits avals (weak types, x64 leaks) that "
                "would retrace beyond the compile contract",
     "chunk-model": "best_chunk_rows plans a chunk whose working set "

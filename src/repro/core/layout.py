@@ -334,6 +334,137 @@ class BitpackedLayout:
                 "pool_shrink_x": (u8 / u1) if self.binary_split else 1.0}
 
 
+def _pad_tree_axis(a, axis: int, target: int, value=0):
+    return ops._pad_dim(a, axis, target, value=value, kind="model")
+
+
+def _shard_bounds(n_trees: int, n_shards: int, t_align: int):
+    """(padded total, per-shard size) for an equal T-axis split where
+    every shard stays a `t_align` multiple."""
+    unit = max(n_shards * max(t_align, 1), 1)
+    total = ops._round_up(max(n_trees, 1), unit)
+    return total, total // n_shards
+
+
+def shard_trees(lowered: LoweredEnsemble, n_shards: int, *,
+                t_align: int = 1) -> list:
+    """Split a lowered ensemble's tree axis into `n_shards` equal
+    slices for mesh model-parallel evaluation.
+
+    Every shard is the same layout class with identical shapes and
+    identical static metadata, so the shards stack into one leading
+    mesh axis (`stack_tree_shards`) and flow through `shard_map` with
+    `PartitionSpec(model_axis)` on every leaf.  Slices are padded with
+    *neutral* trees — split features 0, split bins `PAD_SPLIT_BIN`
+    (always-left), all-zero leaf rows — so a padded tree contributes
+    exactly 0.0 and
+
+        sum_k shard_k.leaf_sum(bins)  ==  lowered.leaf_sum(bins)
+
+    up to float re-association: the per-shard partial sums reduce in a
+    different order than the single-device tree loop, so tree-sharded
+    results match at ~1e-6, not bit-for-bit (the row-sharded data path
+    keeps exact equality — see docs/distributed.md).
+
+    Grouped layouts (depth_grouped / bitpacked) shard *within* each
+    depth group: every shard keeps the full group list (same static
+    depths, same jaxpr) with 1/K of each group's trees.
+    """
+    if n_shards <= 1:
+        return [lowered]
+    if isinstance(lowered, SoaLayout):
+        if lowered.tree_blocks is not None:
+            raise ValueError(
+                "shard_trees on a tree-blocked soa plan is unsupported: "
+                "the block slices were cut for the single-device loop; "
+                "lower with tree_block=0 before tree-sharding")
+        total, per = _shard_bounds(lowered.split_features.shape[0],
+                                   n_shards, t_align)
+        sf = _pad_tree_axis(lowered.split_features, 0, total)
+        sb = _pad_tree_axis(lowered.split_bins, 0, total,
+                            value=PAD_SPLIT_BIN)
+        lv = _pad_tree_axis(lowered.leaf_values, 0, total)
+        return [SoaLayout(lowered.borders,
+                          sf[k * per:(k + 1) * per],
+                          sb[k * per:(k + 1) * per],
+                          lv[k * per:(k + 1) * per], None,
+                          n_outputs=lowered.n_outputs,
+                          n_model_pads=lowered.n_model_pads)
+                for k in range(n_shards)]
+    if isinstance(lowered, DepthMajorLayout):
+        total, per = _shard_bounds(lowered.onehot.shape[0], n_shards,
+                                   t_align)
+        oh = _pad_tree_axis(lowered.onehot, 0, total)
+        sb = _pad_tree_axis(lowered.split_bins_dm, 1, total,
+                            value=PAD_SPLIT_BIN)
+        lv = _pad_tree_axis(lowered.leaf_values, 0, total)
+        return [DepthMajorLayout(lowered.borders,
+                                 oh[k * per:(k + 1) * per],
+                                 sb[:, k * per:(k + 1) * per],
+                                 lowered.pow2,
+                                 lv[k * per:(k + 1) * per],
+                                 n_outputs=lowered.n_outputs,
+                                 n_model_pads=lowered.n_model_pads)
+                for k in range(n_shards)]
+    if isinstance(lowered, DepthGroupedLayout):
+        shard_groups = [[] for _ in range(n_shards)]
+        for g in lowered.groups:
+            total, per = _shard_bounds(g.n_trees, n_shards, t_align)
+            sf = _pad_tree_axis(g.split_features, 0, total)
+            sb = _pad_tree_axis(g.split_bins, 0, total,
+                                value=PAD_SPLIT_BIN)
+            lv = _pad_tree_axis(g.leaf_values, 0, total)
+            for k in range(n_shards):
+                shard_groups[k].append(
+                    DepthGroup(g.depth, sf[k * per:(k + 1) * per],
+                               sb[k * per:(k + 1) * per],
+                               lv[k * per:(k + 1) * per]))
+        return [DepthGroupedLayout(lowered.borders, tuple(gs),
+                                   n_outputs=lowered.n_outputs,
+                                   n_model_pads=lowered.n_model_pads)
+                for gs in shard_groups]
+    if isinstance(lowered, BitpackedLayout):
+        shard_groups = [[] for _ in range(n_shards)]
+        for g in lowered.groups:
+            total, per = _shard_bounds(g.n_trees, n_shards, t_align)
+            sf = _pad_tree_axis(g.split_features_bp, 1, total)
+            # uint8 planes can't hold PAD_SPLIT_BIN; pad 0 instead —
+            # the padded trees' leaf rows are all-zero, so whichever
+            # leaf the always-true comparison selects contributes 0.0
+            pad_bin = (0 if g.split_bins_bp.dtype == jnp.uint8
+                       else PAD_SPLIT_BIN)
+            sb = _pad_tree_axis(g.split_bins_bp, 1, total, value=pad_bin)
+            lv = _pad_tree_axis(g.leaf_values, 0, total)
+            for k in range(n_shards):
+                shard_groups[k].append(
+                    BitpackedGroup(g.depth, sf[:, k * per:(k + 1) * per],
+                                   sb[:, k * per:(k + 1) * per],
+                                   lv[k * per:(k + 1) * per]))
+        return [BitpackedLayout(lowered.borders, tuple(gs),
+                                n_outputs=lowered.n_outputs,
+                                n_model_pads=lowered.n_model_pads,
+                                binary_split=lowered.binary_split,
+                                n_features=lowered.n_features)
+                for gs in shard_groups]
+    raise TypeError(f"shard_trees: unsupported lowered type "
+                    f"{type(lowered).__name__}")
+
+
+def stack_tree_shards(shards: list):
+    """Stack per-shard lowered ensembles (from `shard_trees`) into one
+    pytree with a leading mesh axis on every array leaf, ready for
+    `shard_map` with `in_specs=P(model_axis)`.  The shard body peels
+    the unit leading axis back off with `unstack_tree_shard`."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *shards)
+
+
+def unstack_tree_shard(stacked):
+    """Drop the unit leading mesh axis `shard_map` leaves on every
+    array of a stacked shard (inverse of `stack_tree_shards` inside
+    the mapped body)."""
+    return jax.tree_util.tree_map(lambda a: a[0], stacked)
+
+
 def pack_pool_u1(bins: jax.Array) -> jax.Array:
     """Pack a binary-split quantized pool (N, F) of 0/1 bins into u1
     feature planes -> (N, ceil(F/32)) uint32.

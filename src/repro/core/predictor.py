@@ -486,59 +486,208 @@ class Predictor:
             return self._pool_raw_impl(jnp.asarray(x.bins, jnp.uint8))
         return self._raw_impl(jnp.asarray(x, jnp.float32))
 
+    def _shard_raw(self, lw: LoweredEnsemble, data: jax.Array,
+                   kind: str, cfg: PredictConfig) -> jax.Array:
+        """Shard-local raw tree sum (no base score) over one lowered
+        model — the body every mesh entry maps.  `lw` is the plan's
+        own `LoweredEnsemble` (or one tree shard of it) passed through
+        shard_map as a replicated/partitioned pytree, so the full
+        registry dispatch — any layout, any backend — runs per shard.
+        `kind` is "pool" (uint8 bins, binarize never dispatched) or
+        "float"."""
+        block_t = (cfg.block_t if cfg.strategy == "fused"
+                   else STAGED_TREE_ALIGN)
+        if kind == "pool":
+            bins = ops.pad_features(data, lw.borders.shape[1])
+            return lw.leaf_sum(bins, backend=cfg.backend, block_t=block_t)
+        if cfg.strategy == "fused":
+            return lw.fused_raw(data, backend=cfg.backend,
+                                block_n=cfg.block_n, block_t=cfg.block_t)
+        bins = ops.binarize_prepadded(data, lw.borders,
+                                      backend=cfg.backend)
+        return lw.leaf_sum(bins, backend=cfg.backend, block_t=block_t)
+
     def sharded(self, mesh, *, data_axes: Sequence[str] = ("data",),
                 model_axis: str = "model",
-                strategy: Optional[str] = None
-                ) -> Callable[[jax.Array], jax.Array]:
-        """Mesh-distributed raw scores: samples over `data_axes`, trees
-        over `model_axis` with a psum combine.  The shard_map closure is
-        built once per (mesh, axes, strategy) and cached on the plan.
+                strategy: Optional[str] = None,
+                shard_axis: str = "auto") -> Callable[[Any], jax.Array]:
+        """Mesh-distributed raw scores over floats or a `QuantizedPool`.
 
-        `strategy` overrides the plan's strategy for the per-shard local
-        predict (serving forces `staged` for plans that were resolved
-        from `auto` — the documented sharded-predict strategy)."""
+        The plan's own `LoweredEnsemble` — whatever layout it resolved
+        to: soa / depth_major / depth_grouped / bitpacked — flows into
+        `shard_map` as a pytree, so every shard runs the exact same
+        registry-dispatched kernels as the single-device plan:
+
+          * **row sharding** (the bulk default): the model is
+            replicated (`P()`), rows partition over `data_axes`; a
+            `QuantizedPool` shards its uint8 bins directly — binarize
+            is never dispatched (the pool contract), and the result is
+            bit-for-bit the single-device plan's.
+          * **tree sharding** (giant ensembles): `layout.shard_trees`
+            splits the tree axis into neutral-padded equal slices,
+            stacked over `model_axis`; shard partial sums combine with
+            a `psum` (float re-association: parity ~1e-6, not exact).
+          * **hybrid**: a mesh carrying both `data_axes` and
+            `model_axis` shards rows *and* trees (PR-2's semantics,
+            now on the lowered pytree).
+
+        `shard_axis` ("rows" | "trees" | "auto") picks how a pure data
+        mesh is used; "auto" asks `tuning.best_shard_axis` per batch.
+        Row counts need not divide the mesh: ragged batches are padded
+        to the row-shard multiple inside the jitted entry and sliced
+        back (pad rows are zeros; they never reach the caller).
+
+        `strategy` overrides the plan's strategy for the shard body
+        (serving forces `staged` for auto-resolved plans).  The
+        shard_map closures are built once per (mesh, axes, strategy,
+        shard_axis) and cached on the plan; jit handles per-shape
+        caching under that."""
         from repro.compat import shard_map
 
-        key = (id(mesh), tuple(data_axes), model_axis, strategy)
+        key = (id(mesh), tuple(data_axes), model_axis, strategy,
+               shard_axis)
         fn = self._sharded_cache.get(key)
         if fn is not None:
             return fn
+        if shard_axis not in ("auto", "rows", "trees"):
+            raise ValueError(f"shard_axis must be auto|rows|trees, "
+                             f"got {shard_axis!r}")
 
-        ens, cfg = self.ensemble, self.config
+        cfg = self.config
         if strategy is not None and strategy != cfg.strategy:
             cfg = dataclasses.replace(cfg, strategy=strategy)
-        if cfg.layout != "soa":
-            # per-shard plans lower inside shard_map, where the shard's
-            # split_bins are tracers — the structure-reading layouts
-            # cannot lower there, so shard-local plans stay on soa
-            cfg = dataclasses.replace(cfg, layout="soa")
-        dp, tree_p = P(tuple(data_axes)), P(model_axis)
+            if not cfg.is_resolved:   # staged->fused needs block shapes
+                cfg = cfg.resolve(self.ensemble)
+        lowered = self._ensure_prepared()
+        ens = self.ensemble
+        t_align = (cfg.block_t if cfg.strategy == "fused"
+                   else STAGED_TREE_ALIGN)
 
-        def _local(sf, sb, lv, borders, xs):
-            local = ObliviousEnsemble(sf, sb, lv, borders, ens.n_borders)
-            plan = Predictor.build(local, cfg)  # zero base on tree shards
-            return jax.lax.psum(plan.raw_uncached(xs), model_axis)
+        axis_sizes = dict(mesh.shape)
+        row_axes = tuple(a for a in data_axes if a in axis_sizes)
+        tree_on_model = (model_axis in axis_sizes
+                         and axis_sizes[model_axis] > 1)
 
-        smapped = shard_map(_local, mesh=mesh,
-                            in_specs=(tree_p, tree_p, tree_p, P(), dp),
-                            out_specs=dp)
+        def _n_shards(axes):
+            out = 1
+            for a in axes:
+                out *= int(axis_sizes[a])
+            return out
 
-        # jitted so the shard_map body (which prepares per-shard local
-        # plans) traces once per batch shape, not on every call
-        jitted = jax.jit(lambda x: ens.base_score[None, :] + smapped(
-            ens.split_features, ens.split_bins, ens.leaf_values,
-            ens.borders, x))
+        # mode -> (row axes, tree axes); "trees" on a pure data mesh
+        # reuses the data axes as the model split
+        modes: dict[str, tuple[tuple, tuple]] = {}
+        if tree_on_model:
+            modes["hybrid"] = (row_axes, (model_axis,))
+            pick = lambda n: "hybrid"                     # noqa: E731
+        elif shard_axis == "trees":
+            modes["trees"] = ((), row_axes)
+            pick = lambda n: "trees"                      # noqa: E731
+        elif shard_axis == "rows" or _n_shards(row_axes) <= 1:
+            modes["rows"] = (row_axes, ())
+            pick = lambda n: "rows"                       # noqa: E731
+        else:
+            modes["rows"] = (row_axes, ())
+            modes["trees"] = ((), row_axes)
+            k = _n_shards(row_axes)
+
+            def pick(n):
+                return tuning.best_shard_axis(
+                    n, ens.n_trees, k, n_outputs=ens.n_outputs,
+                    leaf_table_bytes=lowered.leaf_table_bytes())
+
+        entries: dict[tuple, Callable] = {}
+
+        def _entry(mode: str, kind: str) -> Callable:
+            cached = entries.get((mode, kind))
+            if cached is not None:
+                return cached
+            r_axes, t_axes = modes[mode]
+            n_row = _n_shards(r_axes)
+            dp = P(r_axes) if r_axes else P()
+            n_tree = _n_shards(t_axes)
+            if n_tree > 1:
+                stacked = layout_mod.stack_tree_shards(
+                    layout_mod.shard_trees(lowered, n_tree,
+                                           t_align=t_align))
+
+                def _local(st, data):
+                    lw = layout_mod.unstack_tree_shard(st)
+                    return jax.lax.psum(
+                        self._shard_raw(lw, data, kind, cfg), t_axes)
+
+                smapped = shard_map(_local, mesh=mesh,
+                                    in_specs=(P(t_axes), dp),
+                                    out_specs=dp, check_rep=False)
+                model_arg = stacked
+            else:
+                def _local(lw, data):
+                    return self._shard_raw(lw, data, kind, cfg)
+
+                smapped = shard_map(_local, mesh=mesh,
+                                    in_specs=(P(), dp),
+                                    out_specs=dp, check_rep=False)
+                model_arg = lowered
+            name = f"sharded_{kind}"
+
+            def _impl(data):
+                self._note_trace(name)
+                with self._lock:
+                    self._entry_shapes.add((name,) + tuple(data.shape))
+                n = data.shape[0]
+                n_pad = -(-n // n_row) * n_row
+                if n_pad != n:
+                    data = ops._pad_dim(data, 0, n_pad, kind="data")
+                out = ens.base_score[None, :] + smapped(model_arg, data)
+                return out[:n] if n_pad != n else out
+
+            jitted = jax.jit(_impl)
+            entries[(mode, kind)] = jitted
+            return jitted
 
         def fn(x):
-            return jitted(jnp.asarray(x, jnp.float32))
+            if isinstance(x, QuantizedPool):
+                self._check_pool(x)
+                data = x.bins
+                if not (isinstance(data, jax.Array)
+                        and data.dtype == jnp.uint8):
+                    data = jnp.asarray(data, jnp.uint8)
+                kind = "pool"
+            else:
+                data = x
+                if not (isinstance(data, jax.Array)
+                        and data.dtype == jnp.float32):
+                    data = jnp.asarray(data, jnp.float32)
+                kind = "float"
+            return _entry(pick(data.shape[0]), kind)(data)
 
         self._sharded_cache[key] = fn
         return fn
 
     # -- introspection -----------------------------------------------------
+    def _sharded_trace_impl(self, mesh, kind: str) -> Callable:
+        """Un-jitted row-sharded raw impl over `mesh` (real or
+        `AbstractMesh`) — the surface the contract checker's
+        shard-parity pass abstract-traces.  Rows shard over every mesh
+        axis, the lowered model replicates: the jaxpr must not
+        all-gather the bins panel back onto one shard."""
+        from repro.compat import shard_map
+
+        lowered = self._ensure_prepared()
+        cfg = self.config
+        dp = P(tuple(mesh.axis_names))
+
+        def _local(lw, data):
+            return self._shard_raw(lw, data, kind, cfg)
+
+        smapped = shard_map(_local, mesh=mesh, in_specs=(P(), dp),
+                            out_specs=dp, check_rep=False)
+        base = self.ensemble.base_score[None, :]
+        return lambda data: base + smapped(lowered, data)
+
     def trace_entries(self, batch_sizes: Sequence[int] = (8,),
-                      entries: Optional[Sequence[str]] = None
-                      ) -> dict[str, Any]:
+                      entries: Optional[Sequence[str]] = None, *,
+                      mesh=None) -> dict[str, Any]:
         """Abstract traces (ClosedJaxprs) of the plan's entry points —
         the surface the contract checker's transfer/retrace lints walk.
 
@@ -552,7 +701,13 @@ class Predictor:
 
         Pool entries and `quantize` are skipped automatically when the
         ensemble exceeds the uint8 bin budget (they would raise at
-        runtime too); pass `entries` to pin an explicit list."""
+        runtime too); pass `entries` to pin an explicit list.
+
+        With `mesh` (a real mesh or a device-free `AbstractMesh`),
+        the mesh-distributed entry points join the walk as
+        `sharded_raw` / `sharded_raw_pool`, row-sharded over every
+        mesh axis — the contract checker's shard-parity pass reads
+        these; batch sizes must divide the mesh."""
         self._ensure_prepared()
         impls: dict[str, tuple[Callable, Any]] = {
             "raw": (self._raw_impl, jnp.float32),
@@ -563,6 +718,13 @@ class Predictor:
             "classify_pool": (self._pool_classify_impl, jnp.uint8),
             "quantize": (self._quantize_impl, jnp.float32),
         }
+        mesh_key = None
+        if mesh is not None:
+            mesh_key = tuple(sorted(dict(mesh.shape).items()))
+            impls["sharded_raw"] = (
+                self._sharded_trace_impl(mesh, "float"), jnp.float32)
+            impls["sharded_raw_pool"] = (
+                self._sharded_trace_impl(mesh, "pool"), jnp.uint8)
         if entries is None:
             names = list(impls)
             if self.ensemble.borders.shape[0] > MAX_BINS - 1:
@@ -581,7 +743,8 @@ class Predictor:
             for n in batch_sizes:
                 aval = jax.ShapeDtypeStruct(
                     (int(n), self.ensemble.n_features), dtype)
-                key = (name, aval.shape, str(aval.dtype), fingerprint)
+                key = (name, aval.shape, str(aval.dtype), fingerprint,
+                       mesh_key if name.startswith("sharded") else None)
                 with self._lock:
                     closed = self._abstract_traces.get(key)
                 if closed is None:

@@ -1,2 +1,2 @@
 """Distribution substrate: sharding rules, collectives, overlap tricks."""
-from repro.distributed import collectives, sharding  # noqa: F401
+from repro.distributed import collectives, gbdt, sharding  # noqa: F401

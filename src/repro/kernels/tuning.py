@@ -343,3 +343,61 @@ def best_layout(true_depths, n_outputs: int, n_features: int, *,
             costs["depth_major_onehot_bytes"] <= DEPTH_MAJOR_MAX_ONEHOT_BYTES:
         return "depth_major"
     return "soa"
+
+
+# --------------------------------------------------------------------------
+# Mesh shard-axis selection (see Predictor.sharded / docs/distributed.md)
+# --------------------------------------------------------------------------
+# Tree-sharding exists for giant ensembles (the 1k-10k tree regime);
+# below this the psum combine and the reassociated float sum buy
+# nothing a row shard doesn't already give exactly.
+TREE_SHARD_MIN_TREES = 1024
+# Row-sharding replicates the whole lowered model on every shard; past
+# this many replicated bytes the model, not the batch, is the memory
+# problem and the tree split pays for its psum.
+TREE_REPLICATION_BUDGET_BYTES = 64 * 1024 * 1024
+
+
+def shard_count(mesh) -> int:
+    """Total shards a mesh (or plain int) fans out to."""
+    if isinstance(mesh, int):
+        return max(mesh, 1)
+    out = 1
+    for size in dict(mesh.shape).values():
+        out *= int(size)
+    return max(out, 1)
+
+
+def best_shard_axis(n_rows: int, n_trees: int, mesh, *,
+                    n_outputs: int = 1,
+                    leaf_table_bytes: int = 0) -> str:
+    """Pick row- vs tree-sharding for a K-way mesh, the same way
+    `best_layout` / `best_chunk_rows` pick from shape arithmetic.
+
+    The per-shard traversal work is symmetric — ceil(N/K) x T rows-wise
+    vs N x ceil(T/K) trees-wise — so the bulk product never decides.
+    What does:
+
+      rows   exact parity (same addend order per row), no combine;
+             hidden cost is K-fold replication of the lowered model
+      trees  a psum of the (N, C) partial sums, a reassociated float
+             tree sum (~1e-6, not bit-for-bit), and the model split
+             K ways instead of replicated
+
+    So: rows unless the ensemble is in the giant-tree regime
+    (`TREE_SHARD_MIN_TREES`) AND either the replicated leaf tables
+    blow `TREE_REPLICATION_BUDGET_BYTES` or the batch is too ragged to
+    row-shard efficiently (padding utilization below the tree axis's —
+    the N < K serving-batch case).  `mesh` may be a Mesh/AbstractMesh
+    or a plain shard count.
+    """
+    k = shard_count(mesh)
+    if k <= 1:
+        return "rows"
+    if n_trees < TREE_SHARD_MIN_TREES or n_trees < k:
+        return "rows"
+    if leaf_table_bytes * (k - 1) > TREE_REPLICATION_BUDGET_BYTES:
+        return "trees"
+    if _pad_utilization(max(n_rows, 1), k) < _pad_utilization(n_trees, k):
+        return "trees"
+    return "rows"

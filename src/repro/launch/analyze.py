@@ -46,6 +46,9 @@ def main(argv=None) -> int:
                    help="comma-separated op:impl filter")
     p.add_argument("--no-plan", action="store_true",
                    help="skip the Predictor plan-entry walk")
+    p.add_argument("--no-shard", action="store_true",
+                   help="skip the sharded-entry (AbstractMesh) "
+                        "shard-parity pass")
     p.add_argument("--no-tuning", action="store_true",
                    help="skip the chunk/layout tuning-model audits")
     args = p.parse_args(argv)
@@ -54,6 +57,7 @@ def main(argv=None) -> int:
         ops_filter=args.ops.split(",") if args.ops else None,
         impls_filter=args.impls.split(",") if args.impls else None,
         include_plan=not args.no_plan,
+        include_shard=not args.no_shard,
         include_tuning=not args.no_tuning)
 
     if args.json:

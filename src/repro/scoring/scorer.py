@@ -42,7 +42,8 @@ from typing import Any, Mapping, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.predictor import Predictor
+from repro.core.predictor import (Predictor, classify_from_raw,
+                                  proba_from_raw)
 from repro.core.quantize import MAX_BINS
 from repro.data.pipeline import Prefetcher
 from repro.kernels import tuning
@@ -160,6 +161,47 @@ class ScoringMetrics:
                                  if pad_total else 0.0),
             }
 
+    @staticmethod
+    def merge(parts: list["ScoringMetrics"]) -> dict[str, Any]:
+        """One fleet view over per-shard/per-worker bulk metrics.
+
+        Mirrors `ServerMetrics.merge`: counts, compile totals and the
+        throughput rates sum (K workers at X rows/s really move K*X
+        fleet rows/s), wall is the slowest part (shards run
+        concurrently), and chunk-latency percentiles come from the
+        merged reservoirs, not averaged per-shard percentiles."""
+        if not parts:
+            raise ValueError("ScoringMetrics.merge needs at least one "
+                             "part")
+        snaps = [p.snapshot() for p in parts]
+        lat = PercentileReservoir()
+        pad_rows = rows = 0
+        for p in parts:
+            with p._lock:
+                lat.merge(p._chunk_lat)
+                pad_rows += p.padded_rows
+                rows += p.rows
+        busy = (sum(s["quantize_s"] for s in snaps)
+                + sum(s["score_s"] for s in snaps))
+        pad_total = rows + pad_rows
+        return {
+            "name": snaps[0]["name"],
+            "parts": len(parts),
+            "rows": rows,
+            "chunks": sum(s["chunks"] for s in snaps),
+            "compiles": sum(s["compiles"] for s in snaps),
+            "resumed_from": min(s["resumed_from"] for s in snaps),
+            "wall_s": max(s["wall_s"] for s in snaps),
+            "rows_per_s": sum(s["rows_per_s"] for s in snaps),
+            "quantize_s": sum(s["quantize_s"] for s in snaps),
+            "score_s": sum(s["score_s"] for s in snaps),
+            "quantize_frac": (sum(s["quantize_s"] for s in snaps) / busy
+                              if busy else 0.0),
+            "chunk_p50_ms": lat.percentile(50) * 1e3,
+            "chunk_p99_ms": lat.percentile(99) * 1e3,
+            "pad_overhead": (pad_rows / pad_total if pad_total else 0.0),
+        }
+
     def __repr__(self) -> str:
         s = self.snapshot()
         return (f"<ScoringMetrics {s['name']}: {s['rows']} rows in "
@@ -245,13 +287,24 @@ class BulkScorer:
     """
 
     def __init__(self, plans: Predictor | Mapping[str, Predictor],
-                 config: Optional[ScoreConfig] = None, **config_kw: Any):
+                 config: Optional[ScoreConfig] = None, *,
+                 mesh=None, **config_kw: Any):
         if config is None:
             config = ScoreConfig(**config_kw)
         elif config_kw:
             raise TypeError("pass either a ScoreConfig or config kwargs, "
                             f"not both: {sorted(config_kw)}")
         self.config = config
+        # mesh mode: every chunk's rows shard across the mesh through
+        # the plan's `sharded()` pool/float entries (full registry
+        # dispatch per shard, exact row-shard parity).  The streaming
+        # contracts hold unchanged: the chunk planner still fixes <= 2
+        # padded shapes, host memory stays O(chunk), and the Prefetcher
+        # still binarizes chunk k+1 while chunk k's shards score —
+        # prequantized chunks quantize once on the worker and shard
+        # their uint8 bins; the float fallback binarizes shard-locally
+        # inside the mesh body.
+        self.mesh = mesh
         if isinstance(plans, Predictor):
             plans = {"model": plans}
         self.plans = dict(plans)
@@ -344,6 +397,13 @@ class BulkScorer:
 
     def _score_entry(self, plan: Predictor, x) -> np.ndarray:
         out = self.config.output
+        if self.mesh is not None:
+            raw = plan.sharded(self.mesh)(x)
+            if out == "raw":
+                return raw
+            if out == "proba":
+                return proba_from_raw(raw, plan.ensemble.n_outputs)
+            return classify_from_raw(raw, plan.ensemble.n_outputs)
         if out == "raw":
             return plan.raw(x)
         if out == "proba":

@@ -2,5 +2,6 @@
 from repro.serving import batching, engine, metrics  # noqa: F401
 from repro.serving.batching import (Batcher, BucketedBatcher,  # noqa: F401
                                     bucket_for, pad_rows, pow2_buckets)
-from repro.serving.engine import GBDTServer, ModelRegistry  # noqa: F401
+from repro.serving.engine import (GBDTServer, ModelRegistry,  # noqa: F401
+                                  ReplicaGroup)
 from repro.serving.metrics import ServerMetrics  # noqa: F401

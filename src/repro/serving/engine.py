@@ -18,6 +18,7 @@ limitations).  Request aggregation and bucket padding live in
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Any, Callable, Optional, Sequence
 
@@ -84,20 +85,15 @@ class GBDTServer:
         self.metrics = ServerMetrics(name)
         # One plan per server: the tuner sizes fused blocks for the
         # largest bucket; the plan's trace counter feeds `recompiles`.
-        # A mesh server scores exclusively through the sharded closure,
-        # which prepares per tree shard — prepare=False skips the local
-        # padded model copy the serve path would never read.
+        # Mesh servers score through `Predictor.sharded`, which ships
+        # this same lowered model to every shard — one lowering serves
+        # both the local and the mesh path.
         self.predictor = Predictor.build(ensemble, config,
                                          expected_batch=max_batch,
-                                         on_trace=self.metrics.note_trace,
-                                         prepare=mesh is None)
-        # surface the physical layout that actually serves in this
-        # model's metrics: mesh servers score exclusively through the
-        # sharded closure, whose per-shard plans always lower to soa
-        # (tracer shards cannot regroup), regardless of the resolved
-        # local-plan layout
-        self.metrics.layout = ("soa" if mesh is not None
-                               else self.predictor.config.layout)
+                                         on_trace=self.metrics.note_trace)
+        # the sharded path replicates the plan's own lowered model, so
+        # mesh and local servers report the same resolved layout
+        self.metrics.layout = self.predictor.config.layout
         # sharded predict stays on the paper-faithful staged pipeline
         # unless the caller explicitly asked for fused (fused-inside-
         # shard_map is not a serving-supported combination for `auto`)
@@ -167,11 +163,12 @@ class GBDTServer:
         never runs.  Chunks at the largest bucket and pads each chunk
         up to a bucket, so retraces stay bounded by the bucket count
         exactly like the float path; each chunk is recorded in
-        `metrics` the same way the batcher records float batches."""
-        if self._sharded is not None:
-            raise ValueError("pool scoring is not supported on mesh "
-                             "servers (the sharded pipeline binarizes "
-                             "per tree shard)")
+        `metrics` the same way the batcher records float batches.
+
+        Mesh servers score pools through the sharded pool entry: the
+        pre-quantized bins panel is row-sharded across the mesh and the
+        plan's lowered model is replicated, so binarize never runs
+        there either."""
         if len(pool) == 0:
             return self._empty_proba()
         top = self.buckets[-1]
@@ -180,7 +177,13 @@ class GBDTServer:
             chunk = pool.slice_rows(start, stop)
             bucket = bucket_for(len(chunk), self.buckets)
             t0 = time.perf_counter()
-            ys = np.asarray(self.predictor.proba(chunk.pad_rows(bucket)))
+            padded = chunk.pad_rows(bucket)
+            if self._sharded is not None:
+                raw = self._sharded(padded)
+                ys = np.asarray(proba_from_raw(raw,
+                                               self.ensemble.n_outputs))
+            else:
+                ys = np.asarray(self.predictor.proba(padded))
             self.metrics.note_batch(len(chunk), bucket,
                                     time.perf_counter() - t0)
             out.append(ys[:len(chunk)])
@@ -198,21 +201,20 @@ class GBDTServer:
 
         Defaults to ``output="proba"`` — what this server's online
         predicts return — unless the config says otherwise.
+
+        Mesh servers run the bulk job through the same mesh: the
+        scorer's chunk loop stays intact, each chunk scored through the
+        sharded entry (`BulkScorer(mesh=...)`).
         """
         from repro.scoring.scorer import BulkScorer, ScoreConfig
 
-        if self._sharded is not None:
-            raise ValueError("score_source is not supported on mesh "
-                             "servers (the sharded pipeline binarizes "
-                             "per tree shard; run the mesh predict over "
-                             "batches instead)")
         if config is None:
             score_kw.setdefault("output", "proba")
             config = ScoreConfig(**score_kw)
         elif score_kw:
             raise TypeError("pass either a ScoreConfig or config kwargs, "
                             f"not both: {sorted(score_kw)}")
-        return BulkScorer(self.predictor, config).score(
+        return BulkScorer(self.predictor, config, mesh=self.mesh).score(
             source, sinks, resume_from=resume_from)
 
     def _empty_proba(self) -> np.ndarray:
@@ -224,12 +226,86 @@ class GBDTServer:
         self.batcher.close()
 
 
+class ReplicaGroup:
+    """R `GBDTServer`s over disjoint submeshes, behind one model name.
+
+    Requests round-robin across replicas; each replica runs the full
+    sharded predict pipeline on its own devices, so any single request
+    sees exactly the single-replica parity contract.  The group
+    presents the `GBDTServer` scoring surface (`predict`,
+    `predict_batch`, `predict_pool`, `quantize`, `schema_fingerprint`,
+    `score_source`) so `ModelRegistry` routes to it transparently, and
+    `metrics_snapshot()` is the fleet view (`ServerMetrics.merge`).
+    """
+
+    def __init__(self, name: str, servers: Sequence["GBDTServer"]):
+        if not servers:
+            raise ValueError("ReplicaGroup needs at least one server")
+        self.name = name
+        self.servers = list(servers)
+        self._rr = 0
+        self._rr_lock = threading.Lock()
+
+    def _next(self) -> "GBDTServer":
+        with self._rr_lock:
+            server = self.servers[self._rr % len(self.servers)]
+            self._rr += 1
+        return server
+
+    # -- GBDTServer surface -------------------------------------------------
+    @property
+    def ensemble(self):
+        return self.servers[0].ensemble
+
+    @property
+    def mesh(self):
+        return self.servers[0].mesh
+
+    @property
+    def schema_fingerprint(self) -> str:
+        return self.servers[0].schema_fingerprint
+
+    def quantize(self, xs) -> QuantizedPool:
+        # borders are identical across replicas (same ensemble), so a
+        # pool quantized once is scoreable on any of them
+        return self.servers[0].quantize(xs)
+
+    def predict(self, x, timeout: float = 30.0):
+        return self._next().predict(x, timeout=timeout)
+
+    def predict_batch(self, xs):
+        return self._next().predict_batch(xs)
+
+    def predict_pool(self, pool):
+        return self._next().predict_pool(pool)
+
+    def score_source(self, source, sinks=None, **kw):
+        return self._next().score_source(source, sinks, **kw)
+
+    def metrics_snapshot(self) -> dict[str, Any]:
+        merged = ServerMetrics.merge([s.metrics for s in self.servers])
+        merged["model"] = self.name
+        return merged
+
+    def close(self):
+        for s in self.servers:
+            s.close()
+
+
 class ModelRegistry:
     """Several named GBDT ensembles served from one process.
 
     Each model gets its own `GBDTServer` (own batcher thread, own
     compiled `Predictor` plan, own metrics); registry-level `metrics()`
     aggregates the per-model snapshots for export.
+
+    Replica groups: ``register(name, ens, replicas=R, mesh=mesh)``
+    splits the mesh into R disjoint submeshes
+    (`repro.distributed.gbdt.replica_submeshes`) and serves the model
+    from one `GBDTServer` per submesh behind a round-robin
+    `ReplicaGroup` — K models x R replicas share one physical mesh,
+    and `predict_multi` still quantizes once per feature schema across
+    all of them.
 
     Cache invalidation: a `Predictor` plan is immutable — it holds the
     padded model arrays and jit caches for the ensemble it was built
@@ -241,10 +317,11 @@ class ModelRegistry:
 
     def __init__(self, **default_server_kw: Any):
         self._default_kw = default_server_kw
-        self._servers: dict[str, GBDTServer] = {}
+        self._servers: dict[str, GBDTServer | ReplicaGroup] = {}
 
     def register(self, name: str, ensemble: ObliviousEnsemble,
-                 replace: bool = False, **server_kw: Any) -> GBDTServer:
+                 replace: bool = False, *, replicas: int = 1,
+                 **server_kw: Any) -> "GBDTServer | ReplicaGroup":
         if name in self._servers:
             if not replace:
                 raise KeyError(f"model {name!r} already registered "
@@ -254,6 +331,22 @@ class ModelRegistry:
             # and must not survive the swap.
             self._servers.pop(name).close()
         kw = {**self._default_kw, **server_kw, "name": name}
+        if replicas > 1:
+            from repro.distributed.gbdt import replica_submeshes
+
+            mesh = kw.pop("mesh", None)
+            if mesh is None:
+                raise ValueError(
+                    "replicas > 1 needs a mesh to split (pass mesh= "
+                    "to register() or to the registry defaults)")
+            subs = replica_submeshes(mesh, replicas)
+            servers = [GBDTServer(ensemble,
+                                  **{**kw, "mesh": sub,
+                                     "name": f"{name}/r{i}"})
+                       for i, sub in enumerate(subs)]
+            group = ReplicaGroup(name, servers)
+            self._servers[name] = group
+            return group
         server = GBDTServer(ensemble, **kw)
         self._servers[name] = server
         return server
@@ -262,7 +355,7 @@ class ModelRegistry:
         return self.register(name, ObliviousEnsemble.load(path),
                              **server_kw)
 
-    def get(self, name: str) -> GBDTServer:
+    def get(self, name: str) -> "GBDTServer | ReplicaGroup":
         if name not in self._servers:
             raise KeyError(f"unknown model {name!r}; registered: "
                            f"{sorted(self._servers)}")
@@ -290,8 +383,11 @@ class ModelRegistry:
         pool path, which skips binarize entirely.  This is the
         quantize-once/score-many serving pattern the quantized-first
         API exists for (multi-model registries routinely serve model
-        variants trained on one quantized dataset).  Mesh servers
-        don't support pool scoring and fall back to the float path.
+        variants trained on one quantized dataset).  Mesh servers and
+        replica groups take the same path: the sharded pool entry
+        row-shards the already-quantized bins panel, so one quantize
+        still covers every model — and every replica — that shares the
+        schema.
         """
         if names is None:
             names = self.names()
@@ -299,9 +395,6 @@ class ModelRegistry:
         pools: dict[str, QuantizedPool] = {}
         out: dict[str, np.ndarray] = {}
         for name, server in targets:
-            if server.mesh is not None:
-                out[name] = server.predict_batch(xs)
-                continue
             fp = server.schema_fingerprint
             if fp not in pools:
                 pools[fp] = server.quantize(xs)
@@ -309,7 +402,9 @@ class ModelRegistry:
         return out
 
     def metrics(self) -> dict[str, dict[str, Any]]:
-        return {n: s.metrics.snapshot() for n, s in self._servers.items()}
+        return {n: (s.metrics_snapshot() if isinstance(s, ReplicaGroup)
+                    else s.metrics.snapshot())
+                for n, s in self._servers.items()}
 
     def unregister(self, name: str) -> None:
         self._servers.pop(name).close()

@@ -63,6 +63,34 @@ class PercentileReservoir:
         """Total values ever added (>= len(self): the sample is bounded)."""
         return self._seen
 
+    def merge(self, other: "PercentileReservoir") -> None:
+        """Absorb another reservoir's sample into this one.
+
+        Each side's sample is a uniform draw from its own stream;
+        subsampling the concatenation proportionally to the stream
+        sizes keeps the merged sample an (approximately) uniform draw
+        from the combined stream — the fleet-view aggregation
+        `ScoringMetrics.merge` / `ServerMetrics.merge` percentile
+        queries run on.  `seen` adds exactly.
+        """
+        if not isinstance(other, PercentileReservoir):
+            raise TypeError(f"cannot merge {type(other).__name__} into "
+                            "PercentileReservoir")
+        merged = self._values + other._values
+        total = self._seen + other._seen
+        if len(merged) > self.max_samples:
+            # allocate the bounded sample across the two sides
+            # proportionally to their *stream* sizes (not their sample
+            # sizes), then uniform-subsample within each side
+            n_self = min(round(self.max_samples * self._seen
+                               / max(total, 1)), len(self._values))
+            n_other = min(self.max_samples - n_self, len(other._values))
+            n_self = min(self.max_samples - n_other, len(self._values))
+            merged = (self._rng.sample(self._values, n_self)
+                      + self._rng.sample(other._values, n_other))
+        self._values = merged
+        self._seen = total
+
 
 class ServerMetrics:
     MAX_LAT_SAMPLES = 8192
@@ -119,6 +147,43 @@ class ServerMetrics:
                 "pad_overhead": (self.padded_rows / pad_total
                                  if pad_total else 0.0),
             }
+
+    @staticmethod
+    def merge(parts: list["ServerMetrics"]) -> dict[str, Any]:
+        """One fleet view over per-shard/per-replica metrics.
+
+        Count-like fields (requests, batches, recompiles) and the
+        throughput rates sum — R replicas each serving X rows/s really
+        do serve R*X fleet rows/s — while the latency percentiles come
+        from the *merged* reservoirs (a request on any replica is one
+        draw from the fleet's latency distribution; averaging per-shard
+        p99s would be wrong).  Layout is reported when every part
+        agrees, else "mixed"."""
+        if not parts:
+            raise ValueError("ServerMetrics.merge needs at least one part")
+        snaps = [p.snapshot() for p in parts]
+        lat = PercentileReservoir(ServerMetrics.MAX_LAT_SAMPLES)
+        pad_rows = served = 0
+        for p in parts:
+            with p._lock:
+                lat.merge(p._lat)
+                pad_rows += p.padded_rows
+                served += p.served_rows
+        layouts = {s["layout"] for s in snaps}
+        pad_total = served + pad_rows
+        return {
+            "model": snaps[0]["model"],
+            "replicas": len(parts),
+            "layout": layouts.pop() if len(layouts) == 1 else "mixed",
+            "requests": sum(s["requests"] for s in snaps),
+            "batches": sum(s["batches"] for s in snaps),
+            "recompiles": sum(s["recompiles"] for s in snaps),
+            "requests_per_s": sum(s["requests_per_s"] for s in snaps),
+            "rows_per_s": sum(s["rows_per_s"] for s in snaps),
+            "batch_p50_ms": lat.percentile(50) * 1e3,
+            "batch_p99_ms": lat.percentile(99) * 1e3,
+            "pad_overhead": (pad_rows / pad_total if pad_total else 0.0),
+        }
 
     def __repr__(self) -> str:
         s = self.snapshot()

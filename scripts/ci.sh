@@ -12,6 +12,13 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# The quick benches below write their scenario JSONs here instead of
+# results/perf (which stays the committed full-run trajectory); the
+# perf-regression gate at the end compares this dir against the
+# committed baselines — reusing the runs CI does anyway.
+PERF_FRESH="$(mktemp -d)"
+trap 'rm -rf "$PERF_FRESH"' EXIT
+
 echo "== import check (every repro module) =="
 python - <<'EOF'
 import importlib, pathlib, pkgutil, sys
@@ -91,8 +98,10 @@ echo "== scoring benchmark (quick, parity + chunk-shape + throughput gate) =="
 # --check fails the build unless BulkScorer output matches the naive
 # predict_batch loop exactly, every bulk run compiled <= 2 chunk
 # shapes, and the best scorer beats the naive loop (1.2x floor in
-# quick mode).  --no-write keeps the committed results/perf/ JSONs.
-python -m benchmarks.scoring_bench --quick --check --no-write >/dev/null
+# quick mode).  --out-dir diverts the scenario JSONs to the perf-gate
+# scratch dir (the committed results/perf/ JSONs stay untouched).
+python -m benchmarks.scoring_bench --quick --check \
+    --out-dir "$PERF_FRESH" >/dev/null
 
 echo "== train smoke (streamed source -> GBDTTrainer -> exact serve parity) =="
 # --check fails unless serve parity is EXACT (0.0), boosting performed
@@ -107,7 +116,8 @@ echo "== training benchmark (quick: seed-float vs pool vs streamed) =="
 # --check fails unless the pool path reproduces the seed float scan to
 # the leaf-value level, streamed == pool, and a warmed pool refit
 # performs zero new histogram dispatches (compiled-shape contract)
-python -m benchmarks.training_bench --quick --check --no-write >/dev/null
+python -m benchmarks.training_bench --quick --check \
+    --out-dir "$PERF_FRESH" >/dev/null
 
 echo "== predictor smoke benchmark (prepared / prequantized / registry / layouts) =="
 # --check fails the build if the prepared-plan path is below parity
@@ -117,9 +127,10 @@ echo "== predictor smoke benchmark (prepared / prequantized / registry / layouts
 # same kernel math), or if any lowered layout (all four: soa /
 # depth_major / depth_grouped / bitpacked swept over a mixed-depth
 # ensemble) diverges from the jnp reference — the layout parity gate.
-# --no-write keeps CI runs from clobbering the committed results/perf/
-# trajectory.
-python -m benchmarks.predictor_bench --quick --check --no-write >/dev/null
+# --out-dir diverts this run's JSONs to the perf-gate scratch dir so
+# the committed results/perf/ trajectory is not clobbered.
+python -m benchmarks.predictor_bench --quick --check \
+    --out-dir "$PERF_FRESH" >/dev/null
 
 echo "== mesh smoke (sharded parity tests + weak-scaling gate) =="
 # row-sharded pool/float predict must match single-device bit-for-bit
@@ -130,7 +141,46 @@ echo "== mesh smoke (sharded parity tests + weak-scaling gate) =="
 python -m pytest -x -q tests/test_distributed_gbdt.py
 # weak-scaling gate: one subprocess per device count, exact parity at
 # every K and >= 1.5x rows/s at K=4 vs K=1 on the prequantized bulk
-# scenario.  --no-write keeps the committed results/perf/ JSONs.
-python -m benchmarks.mesh_bench --quick --check --no-write >/dev/null
+# scenario.  --out-dir diverts the JSONs to the perf-gate scratch dir.
+python -m benchmarks.mesh_bench --quick --check \
+    --out-dir "$PERF_FRESH" >/dev/null
+
+echo "== observability smoke (span tracer + metrics hub end to end) =="
+# a tiny bulk-scoring run with --trace-out/--metrics-out, then assert
+# the Chrome trace parses and contains the span taxonomy CI depends on
+# (dispatch/<op> kernel spans, compile/<entry> instants, the
+# bulk/quantize|score|sink pipeline) and the metrics export carries the
+# scoring snapshot
+OBS_TRACE="$PERF_FRESH/obs-trace.json"
+OBS_METRICS="$PERF_FRESH/obs-metrics.json"
+python -m repro.launch.score --dataset covertype --scale 0.002 \
+    --trees 10 --chunk 256 --strategy staged --backend ref \
+    --trace-out "$OBS_TRACE" --metrics-out "$OBS_METRICS" >/dev/null
+python - "$OBS_TRACE" "$OBS_METRICS" <<'EOF'
+import json, sys
+
+trace = json.load(open(sys.argv[1]))
+names = [e["name"] for e in trace["traceEvents"]]
+for want in ("dispatch/", "compile/", "bulk/quantize", "bulk/score",
+             "bulk/sink"):
+    assert any(n.startswith(want) for n in names), \
+        f"trace missing {want} spans: {sorted(set(names))[:20]}"
+assert all({"ph", "pid", "tid"} <= set(e) for e in
+           trace["traceEvents"]), "malformed Chrome trace events"
+assert all("ts" in e for e in trace["traceEvents"] if e["ph"] != "M"), \
+    "timed events missing ts"
+metrics = json.load(open(sys.argv[2]))
+snap = metrics["metrics"]["scoring/bulk"]
+assert snap["rows"] > 0 and "rows_per_s" in snap, snap
+print(f"obs smoke OK: {len(names)} events, "
+      f"{snap['rows']} rows metered")
+EOF
+
+echo "== perf-regression gate (fresh quick runs vs committed baselines) =="
+# compares the scenario JSONs the benches above just wrote against the
+# committed results/perf trajectory: speedup ratios within the
+# tolerance band, parity errors capped, exactness flags and
+# zero-dispatch contracts intact.  Exits non-zero on regression.
+python -m repro.launch.perf_gate --check --fresh-dir "$PERF_FRESH"
 
 echo "CI OK"

@@ -64,6 +64,9 @@ from repro.kernels import ops
 from repro.kernels import registry
 from repro.kernels import tuning
 from repro.kernels.ops import PAD_SPLIT_BIN
+from repro.obs.trace import get_tracer
+
+_TRACER = get_tracer()
 
 Strategy = Literal["auto", "staged", "fused"]
 Backend = str   # "auto" or a kernel-registry backend family
@@ -340,6 +343,12 @@ class Predictor:
             self._note_trace(name)
             with self._lock:
                 self._entry_shapes.add((name,) + tuple(x.shape))
+            if _TRACER.enabled:
+                # one instant per XLA compile: (entry, layout, batch
+                # bucket) — the timeline marker for every cache miss
+                _TRACER.instant(f"compile/{name}", "compile",
+                                entry=name, layout=self.config.layout,
+                                batch=int(x.shape[0]))
             return impl(x)
         return jax.jit(traced)
 
@@ -634,6 +643,13 @@ class Predictor:
                 self._note_trace(name)
                 with self._lock:
                     self._entry_shapes.add((name,) + tuple(data.shape))
+                if _TRACER.enabled:
+                    _TRACER.instant(f"compile/{name}", "compile",
+                                    entry=name, layout=cfg.layout,
+                                    batch=int(data.shape[0]),
+                                    shard_mode=mode,
+                                    row_shards=n_row,
+                                    tree_shards=n_tree)
                 n = data.shape[0]
                 n_pad = -(-n // n_row) * n_row
                 if n_pad != n:
@@ -644,6 +660,9 @@ class Predictor:
             jitted = jax.jit(_impl)
             entries[(mode, kind)] = jitted
             return jitted
+
+        n_devices = int(np.prod([int(s) for s in axis_sizes.values()])) \
+            if axis_sizes else 1
 
         def fn(x):
             if isinstance(x, QuantizedPool):
@@ -659,7 +678,14 @@ class Predictor:
                         and data.dtype == jnp.float32):
                     data = jnp.asarray(data, jnp.float32)
                 kind = "float"
-            return _entry(pick(data.shape[0]), kind)(data)
+            mode = pick(data.shape[0])
+            if not _TRACER.enabled:
+                return _entry(mode, kind)(data)
+            with _TRACER.span(f"sharded/{kind}", "sharded",
+                              shard_axis=mode, devices=n_devices,
+                              rows=int(data.shape[0]),
+                              layout=cfg.layout):
+                return _entry(mode, kind)(data)
 
         self._sharded_cache[key] = fn
         return fn

@@ -109,7 +109,10 @@ class Prefetcher:
             finally:
                 self.q.put(None)
 
-        self.thread = threading.Thread(target=worker, daemon=True)
+        # named so trace exports label this track (obs.trace reads
+        # thread names for its Chrome thread_name metadata rows)
+        self.thread = threading.Thread(target=worker, daemon=True,
+                                       name="prefetcher")
         self.thread.start()
 
     def __iter__(self):

@@ -36,6 +36,10 @@ import dataclasses
 import functools
 from typing import Any, Callable, Optional
 
+from repro.obs.trace import get_tracer
+
+_TRACER = get_tracer()
+
 # The six kernel ops every backend family must cover (histogram is the
 # training-side op; the other five serve prediction).
 CORE_OPS = ("binarize", "leaf_index", "leaf_gather", "l2sq",
@@ -216,10 +220,38 @@ def dispatch(op: str, backend: str, *args: Any,
              dtype: Optional[str] = None,
              layout: Optional[str] = None, **kw: Any) -> Any:
     """Resolve and call: the single entry every `kernels.ops` public
-    wrapper (and its legacy `backend=` shim) funnels through."""
+    wrapper (and its legacy `backend=` shim) funnels through.
+
+    When the obs tracer is enabled, each dispatch records a
+    `dispatch/<op>` span tagged (op, impl, layout, bin-dtype, operand
+    shapes, block kwargs, row pad utilization) — the per-kernel
+    attribution the paper does loop-by-loop on hardware.  Disabled cost
+    is one attribute load + bool test; no span kwargs are built."""
     impl = get(op, resolve(op, backend, dtype=dtype, layout=layout))
     _CALL_STATS[op] = _CALL_STATS.get(op, 0) + 1
-    return impl.fn(*args, **kw)
+    if not _TRACER.enabled:
+        return impl.fn(*args, **kw)
+    attrs: dict[str, Any] = {"op": op, "impl": impl.name,
+                             "layout": layout or "-",
+                             "dtype": dtype or "-"}
+    shapes = [tuple(int(d) for d in a.shape)
+              for a in args if hasattr(a, "shape")]
+    if shapes:
+        attrs["shapes"] = str(shapes)
+    blocks = {k: v for k, v in kw.items()
+              if k.startswith("block") and isinstance(v, int) and v > 0}
+    attrs.update(blocks)
+    # fraction of the row-blocked grid that is real data (the span's
+    # pad-utilization tag; 1.0 = no block padding on the row axis)
+    row_block = blocks.get("block_m") or blocks.get("block_rows")
+    if row_block and shapes:
+        rows = shapes[0][0]
+        padded = -(-rows // row_block) * row_block
+        attrs["pad_util_rows"] = rows / padded if padded else 1.0
+    _TRACER.counter("dispatch_count", "kernel",
+                    **{op: float(_CALL_STATS[op])})
+    with _TRACER.span(f"dispatch/{op}", "kernel", **attrs):
+        return impl.fn(*args, **kw)
 
 
 def impls_for_layout(op: str, layout: str) -> list[str]:
@@ -287,14 +319,20 @@ def format_table(verified: Optional[dict[str, str]] = None) -> str:
     The `verified` column carries the contract checker's per-impl
     verdict (`repro.launch.analyze`); by default it is sourced from the
     checker's last committed report via `load_verified()`.  Pass a dict
-    to override, or `{}` to render the column blank."""
+    to override, or `{}` to render the column blank.
+
+    The `dispatch_count` column is this process's `call_stats()` total
+    for the row's op (counts are per-op — the registry ticks before
+    impl resolution is observable per-call)."""
     if verified is None:
         verified = load_verified()
+    stats = call_stats()
     rows = table()
     for r in rows:
         r["verified"] = verified.get(f"{r['op']}:{r['impl']}", "-")
+        r["dispatch_count"] = str(stats.get(r["op"], 0))
     cols = ("op", "impl", "family", "dtypes", "platforms", "layouts",
-            "verified", "constraints")
+            "verified", "dispatch_count", "constraints")
     widths = {c: max(len(c), *(len(r[c]) for r in rows)) for c in cols}
     def line(vals):
         return "| " + " | ".join(v.ljust(widths[c])

@@ -149,6 +149,8 @@ def main() -> int:
     ap.add_argument("--check", action="store_true",
                     help="verify bulk output against the one-shot "
                          "Predictor path; exit 1 on mismatch")
+    from repro.launch.obs_cli import add_obs_flags
+    add_obs_flags(ap)
     args = ap.parse_args()
     if sum([bool(args.out), args.stats_only, bool(args.top_k)]) > 1:
         ap.error("--out, --stats-only and --top-k pick one output mode "
@@ -164,9 +166,11 @@ def main() -> int:
         ap.error("--check compares full score panels; it needs the "
                  "array or --out output mode")
 
+    from repro.launch.obs_cli import finish_obs, start_tracing
     from repro.scoring import ScoreConfig
     from repro.scoring.scorer import BulkScorer
 
+    start_tracing(args)
     plans = _build_plans(args)
     source = _build_source(args)
     sinks = _build_sinks(args, plans)
@@ -189,6 +193,7 @@ def main() -> int:
            f"{m['quantize_frac']:.0%} of busy time, pad overhead "
            f"{m['pad_overhead']:.1%}")
     print(json.dumps({k: v for k, v in m.items()}, default=float))
+    finish_obs(args, {"scoring/bulk": m})
     for name, out in result.outputs.items():
         if isinstance(out, dict) and "mean" in out:      # StatsSink
             eprint(f"[score] {name}: mean={np.round(out['mean'], 4)} "

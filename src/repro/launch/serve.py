@@ -18,8 +18,10 @@ def serve_gbdt(args):
     from repro.core.boosting import BoostingParams
     from repro.core.predictor import PredictConfig
     from repro.data import synthetic
+    from repro.launch.obs_cli import finish_obs, start_tracing
     from repro.serving.engine import ModelRegistry
 
+    start_tracing(args)
     ds = synthetic.load(args.dataset, scale=args.scale)
     loss = losses.make_loss(ds.loss, n_classes=max(ds.n_classes, 2),
                             group_index=ds.group_index_train)
@@ -33,7 +35,8 @@ def serve_gbdt(args):
                            layout=args.layout,
                            tree_block=args.tree_block)
     registry = ModelRegistry(max_batch=args.batch, config=config,
-                             min_bucket=args.min_bucket)
+                             min_bucket=args.min_bucket,
+                             deadline_ms=args.deadline_ms or None)
     server = registry.register(args.dataset, ens)
     # the multi-model shared-quantizer demo: K tree-slice variants of
     # the model share its quantization schema, so predict_multi
@@ -68,6 +71,9 @@ def serve_gbdt(args):
               f"{len(out)} models, quantize-once) in {dt * 1e3:.1f}ms")
     print(f"[serve:gbdt] metrics: "
           f"{json.dumps(registry.metrics()[args.dataset], default=float)}")
+    finish_obs(args, {f"serving/{n}": (
+        s.metrics if hasattr(s, "metrics") else s.metrics_snapshot)
+        for n, s in ((n, registry.get(n)) for n in registry.names())})
     registry.close()
 
 
@@ -117,8 +123,14 @@ def main():
     ap.add_argument("--multi", type=int, default=1,
                     help="register K schema-sharing model variants and "
                          "demo the quantize-once predict_multi path")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="arm per-batch deadline-SLO accounting at this "
+                         "latency (0 = off); attainment/shed/p99-under-"
+                         "deadline land in the metrics snapshot")
     ap.add_argument("--show-kernels", action="store_true",
                     help="print the kernel registry table and exit")
+    from repro.launch.obs_cli import add_obs_flags
+    add_obs_flags(ap)
     args = ap.parse_args()
     if args.show_kernels:
         from repro.core import layout as layout_mod

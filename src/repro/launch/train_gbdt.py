@@ -71,6 +71,8 @@ def main(argv=None) -> int:
                     help="resume from checkpointed tree index "
                          "(-1 = latest)")
     ap.add_argument("--check", action="store_true")
+    from repro.launch.obs_cli import add_obs_flags
+    add_obs_flags(ap)
     args = ap.parse_args(argv)
 
     if args.ckpt_every and not args.ckpt_dir:
@@ -97,6 +99,8 @@ def main(argv=None) -> int:
                           name=f"gbdt-{args.dataset}")
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
+    from repro.launch.obs_cli import finish_obs, start_tracing
+    start_tracing(args)
     eprint(f"training {args.trees} trees (depth {args.depth}) on "
            f"{source.n_rows} streamed rows "
            f"({source.base_rows} base x {args.repeat})")
@@ -137,6 +141,8 @@ def main(argv=None) -> int:
         "metrics": hist["metrics"],
     }
     print(json.dumps(out, indent=2, default=float))
+    finish_obs(args, {f"training/{trainer.metrics.name}":
+                      trainer.metrics})
 
     if args.check:
         failures = []

@@ -1,0 +1,23 @@
+"""Unified telemetry: dispatch-level tracing + metrics aggregation.
+
+The paper's whole argument is a measurement story — it attributes the
+RISC-V speedups loop-by-loop by benchmarking each vectorized kernel on
+real hardware.  This package is that attribution layer for our stack:
+
+* `repro.obs.trace` — a thread-safe, near-zero-overhead-when-disabled
+  span tracer with a Chrome-trace-event exporter (loadable in Perfetto
+  / chrome://tracing).  Every hot path is instrumented: kernel-registry
+  dispatches, Predictor compile events, BulkScorer quantize/score/sink
+  stages (prefetch overlap visible on the timeline), per-level training
+  histogram passes, sharded mesh entries.
+* `repro.obs.hub` — a `MetricsHub` that registers the existing
+  `ServerMetrics` / `ScoringMetrics` / `TrainingMetrics` snapshots
+  behind one namespace and exports Prometheus-textfile and JSON
+  formats; serving snapshots carry deadline-SLO accounting.
+
+See docs/observability.md for the span taxonomy and exporter formats.
+"""
+from repro.obs.trace import (Tracer, get_tracer, span, instant, counter,
+                             enable, disable, enabled,
+                             export_chrome)   # noqa: F401
+from repro.obs.hub import MetricsHub          # noqa: F401

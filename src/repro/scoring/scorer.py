@@ -47,12 +47,15 @@ from repro.core.predictor import (Predictor, classify_from_raw,
 from repro.core.quantize import MAX_BINS
 from repro.data.pipeline import Prefetcher
 from repro.kernels import tuning
+from repro.obs.trace import get_tracer
 from repro.scoring.sinks import ArraySink, ScoreSink
 from repro.scoring.sources import RowSource
 from repro.serving.batching import bucket_for, pad_rows, pow2_buckets
 from repro.serving.metrics import PercentileReservoir
 
 _OUTPUTS = ("raw", "proba", "classify")
+
+_TRACER = get_tracer()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +117,9 @@ class ScoringMetrics:
         self.resumed_from = 0
         self._chunk_lat = PercentileReservoir()
         self._t0: Optional[float] = None
+        # interval-rate markers: state of the previous snapshot() call
+        self._prev_t = time.perf_counter()
+        self._prev_rows = 0
 
     def start(self) -> None:
         self._t0 = time.perf_counter()
@@ -122,6 +128,21 @@ class ScoringMetrics:
         if self._t0 is not None:
             self.wall_s += time.perf_counter() - self._t0
             self._t0 = None
+
+    def reset(self) -> None:
+        """Zero all counters and restart the rate clocks (the name
+        survives).  A running interval (`start()` without `stop()`)
+        restarts from now."""
+        with self._lock:
+            self.rows = self.padded_rows = self.chunks = 0
+            self.quantize_s = self.score_s = self.wall_s = 0.0
+            self.compiles = self.resumed_from = 0
+            self._chunk_lat = PercentileReservoir()
+            now = time.perf_counter()
+            if self._t0 is not None:
+                self._t0 = now
+            self._prev_t = now
+            self._prev_rows = 0
 
     def note_quantize(self, seconds: float) -> None:
         """Called from the prefetch worker thread."""
@@ -137,29 +158,45 @@ class ScoringMetrics:
             self.score_s += score_seconds
             self._chunk_lat.add(score_seconds)
 
+    def _locked_snapshot(self, advance_interval: bool) -> dict[str, Any]:
+        """Build the snapshot dict; caller holds self._lock.
+
+        `wall_s` includes the in-progress interval when called between
+        `start()` and `stop()`, so a mid-run snapshot's `rows_per_s` is
+        live, not the value frozen at the last `stop()`."""
+        now = time.perf_counter()
+        wall = self.wall_s + (now - self._t0
+                              if self._t0 is not None else 0.0)
+        idt = max(now - self._prev_t, 1e-9)
+        busy = self.quantize_s + self.score_s
+        pad_total = self.rows + self.padded_rows
+        snap = {
+            "name": self.name,
+            "rows": self.rows,
+            "chunks": self.chunks,
+            "compiles": self.compiles,
+            "resumed_from": self.resumed_from,
+            "wall_s": wall,
+            "rows_per_s": self.rows / wall if wall else 0.0,
+            "interval_rows_per_s": (self.rows - self._prev_rows) / idt,
+            "quantize_s": self.quantize_s,
+            "score_s": self.score_s,
+            # note quantize overlaps score on the worker thread, so
+            # the fractions describe where the work went, not wall
+            "quantize_frac": self.quantize_s / busy if busy else 0.0,
+            "chunk_p50_ms": self._chunk_lat.percentile(50) * 1e3,
+            "chunk_p99_ms": self._chunk_lat.percentile(99) * 1e3,
+            "pad_overhead": (self.padded_rows / pad_total
+                             if pad_total else 0.0),
+        }
+        if advance_interval:
+            self._prev_t = now
+            self._prev_rows = self.rows
+        return snap
+
     def snapshot(self) -> dict[str, Any]:
         with self._lock:
-            busy = self.quantize_s + self.score_s
-            pad_total = self.rows + self.padded_rows
-            return {
-                "name": self.name,
-                "rows": self.rows,
-                "chunks": self.chunks,
-                "compiles": self.compiles,
-                "resumed_from": self.resumed_from,
-                "wall_s": self.wall_s,
-                "rows_per_s": (self.rows / self.wall_s if self.wall_s
-                               else 0.0),
-                "quantize_s": self.quantize_s,
-                "score_s": self.score_s,
-                # note quantize overlaps score on the worker thread, so
-                # the fractions describe where the work went, not wall
-                "quantize_frac": self.quantize_s / busy if busy else 0.0,
-                "chunk_p50_ms": self._chunk_lat.percentile(50) * 1e3,
-                "chunk_p99_ms": self._chunk_lat.percentile(99) * 1e3,
-                "pad_overhead": (self.padded_rows / pad_total
-                                 if pad_total else 0.0),
-            }
+            return self._locked_snapshot(advance_interval=True)
 
     @staticmethod
     def merge(parts: list["ScoringMetrics"]) -> dict[str, Any]:
@@ -173,11 +210,15 @@ class ScoringMetrics:
         if not parts:
             raise ValueError("ScoringMetrics.merge needs at least one "
                              "part")
-        snaps = [p.snapshot() for p in parts]
+        # one locked pass per part: snapshot fields and the reservoir
+        # come from the same instant (and the non-advancing read leaves
+        # each part's interval window to its own poller)
+        snaps = []
         lat = PercentileReservoir()
         pad_rows = rows = 0
         for p in parts:
             with p._lock:
+                snaps.append(p._locked_snapshot(advance_interval=False))
                 lat.merge(p._chunk_lat)
                 pad_rows += p.padded_rows
                 rows += p.rows
@@ -193,6 +234,8 @@ class ScoringMetrics:
             "resumed_from": min(s["resumed_from"] for s in snaps),
             "wall_s": max(s["wall_s"] for s in snaps),
             "rows_per_s": sum(s["rows_per_s"] for s in snaps),
+            "interval_rows_per_s": sum(s["interval_rows_per_s"]
+                                       for s in snaps),
             "quantize_s": sum(s["quantize_s"] for s in snaps),
             "score_s": sum(s["score_s"] for s in snaps),
             "quantize_frac": (sum(s["quantize_s"] for s in snaps) / busy
@@ -366,31 +409,37 @@ class BulkScorer:
         def prepare(item):
             span, x = item
             t0 = time.perf_counter()
-            payload: dict[str, Any] = {}
-            need_float = any(not g.use_pool for g in self._groups.values())
-            if need_float:
-                payload["__float__"] = jnp.asarray(
-                    pad_rows(x, span.padded), jnp.float32)
-            for fp, g in self._groups.items():
-                if g.use_pool:
-                    # every chunk — the tail too — binarizes through
-                    # the representative plan's jitted quantize entry
-                    # at the one full-chunk shape (a zero-padded float
-                    # row bins to 0, exactly what pool padding yields)
-                    pool = g.rep.quantize(
-                        x if span.n_valid == chunk_rows
-                        else pad_rows(x, chunk_rows))
-                    if span.padded != chunk_rows:
-                        # tail: slice the valid rows back out and
-                        # bucket-pad the pool to the planned tail shape
-                        pool = pool.slice_rows(0, span.n_valid) \
-                                   .pad_rows(span.padded)
-                    # force the binarize to finish HERE, on the worker
-                    # thread: jax dispatch is async, and an unfinished
-                    # pool would push the quantize work onto the main
-                    # thread's sync point, killing the overlap
-                    pool.bins.block_until_ready()
-                    payload[fp] = pool
+            # this span lands on the Prefetcher worker's thread id, so
+            # the exported timeline shows chunk k+1's quantize riding
+            # under chunk k's bulk/score on the main-thread track
+            with _TRACER.span("bulk/quantize", "bulk", chunk=span.index,
+                              rows=span.n_valid, padded=span.padded):
+                payload: dict[str, Any] = {}
+                need_float = any(not g.use_pool
+                                 for g in self._groups.values())
+                if need_float:
+                    payload["__float__"] = jnp.asarray(
+                        pad_rows(x, span.padded), jnp.float32)
+                for fp, g in self._groups.items():
+                    if g.use_pool:
+                        # every chunk — the tail too — binarizes through
+                        # the representative plan's jitted quantize entry
+                        # at the one full-chunk shape (a zero-padded float
+                        # row bins to 0, exactly what pool padding yields)
+                        pool = g.rep.quantize(
+                            x if span.n_valid == chunk_rows
+                            else pad_rows(x, chunk_rows))
+                        if span.padded != chunk_rows:
+                            # tail: slice the valid rows back out and
+                            # bucket-pad the pool to the planned tail shape
+                            pool = pool.slice_rows(0, span.n_valid) \
+                                       .pad_rows(span.padded)
+                        # force the binarize to finish HERE, on the worker
+                        # thread: jax dispatch is async, and an unfinished
+                        # pool would push the quantize work onto the main
+                        # thread's sync point, killing the overlap
+                        pool.bins.block_until_ready()
+                        payload[fp] = pool
             metrics.note_quantize(time.perf_counter() - t0)
             return span, payload
         return prepare
@@ -457,11 +506,13 @@ class BulkScorer:
             stream = map(prepare, read_spans())
         def drain(entry):
             span, outs, t0 = entry
-            for name, ys in outs.items():
-                ys = np.asarray(ys, np.float32)   # host sync point
-                if ys.ndim == 1:                  # classify: (N,) ids
-                    ys = ys[:, None]
-                sinks[name].write(span.start, ys[:span.n_valid])
+            with _TRACER.span("bulk/sink", "bulk", chunk=span.index,
+                              rows=span.n_valid):
+                for name, ys in outs.items():
+                    ys = np.asarray(ys, np.float32)   # host sync point
+                    if ys.ndim == 1:                  # classify: (N,) ids
+                        ys = ys[:, None]
+                    sinks[name].write(span.start, ys[:span.n_valid])
             metrics.note_chunk(span.n_valid, span.padded,
                                time.perf_counter() - t0)
 
@@ -474,11 +525,17 @@ class BulkScorer:
             for span, payload in stream:
                 t0 = time.perf_counter()
                 outs = {}
-                for name, plan in self.plans.items():
-                    g = self._group_of[name]
-                    x_in = payload[g.fingerprint if g.use_pool
-                                   else "__float__"]
-                    outs[name] = self._score_entry(plan, x_in)
+                # covers dispatch only (jax is async): device compute
+                # overlaps the next iteration; the sync cost is under
+                # the chunk's bulk/sink span
+                with _TRACER.span("bulk/score", "bulk", chunk=span.index,
+                                  rows=span.n_valid, padded=span.padded,
+                                  models=len(self.plans)):
+                    for name, plan in self.plans.items():
+                        g = self._group_of[name]
+                        x_in = payload[g.fingerprint if g.use_pool
+                                       else "__float__"]
+                        outs[name] = self._score_entry(plan, x_in)
                 pending.append((span, outs, t0))
                 if len(pending) > 1:
                     drain(pending.pop(0))

@@ -18,6 +18,7 @@ limitations).  Request aggregation and bucket padding live in
 """
 from __future__ import annotations
 
+import queue
 import threading
 import time
 from typing import Any, Callable, Optional, Sequence
@@ -30,9 +31,12 @@ from repro.core import knn
 from repro.core.predictor import PredictConfig, Predictor, proba_from_raw
 from repro.core.quantize import QuantizedPool
 from repro.core.trees import ObliviousEnsemble
+from repro.obs.trace import get_tracer
 from repro.serving.batching import (Batcher, BucketedBatcher,  # noqa: F401
                                     Request, bucket_for, chunks)
 from repro.serving.metrics import ServerMetrics
+
+_TRACER = get_tracer()
 
 
 class GBDTServer:
@@ -66,7 +70,8 @@ class GBDTServer:
                  max_wait_ms: float = 2.0,
                  buckets: Optional[Sequence[int]] = None,
                  min_bucket: int = 16,
-                 name: str = "gbdt"):
+                 name: str = "gbdt",
+                 deadline_ms: Optional[float] = None):
         legacy_kw = {"strategy": strategy, "backend": backend,
                      "tree_block": tree_block, "block_n": block_n,
                      "block_t": block_t}
@@ -82,7 +87,10 @@ class GBDTServer:
                     f"kwargs, not both: {sorted(clashing)}")
         self.ensemble = ensemble
         self.mesh = mesh
-        self.metrics = ServerMetrics(name)
+        # deadline_ms arms the SLO accounting: every scored batch is
+        # classified hit/miss against it and predict() timeouts count
+        # as sheds (see serving.metrics.ServerMetrics / docs)
+        self.metrics = ServerMetrics(name, deadline_ms=deadline_ms)
         # One plan per server: the tuner sizes fused blocks for the
         # largest bucket; the plan's trace counter feeds `recompiles`.
         # Mesh servers score through `Predictor.sharded`, which ships
@@ -105,10 +113,14 @@ class GBDTServer:
                 mesh, strategy=sharded_strategy)
 
         def serve(xs: np.ndarray) -> np.ndarray:
-            if self._sharded is not None:
-                raw = self._sharded(jnp.asarray(xs, jnp.float32))
-                return np.asarray(proba_from_raw(raw, ensemble.n_outputs))
-            return np.asarray(self.predictor.proba(xs))
+            # lands on the batcher thread's track in exported traces
+            with _TRACER.span("serve/batch", "serve", model=name,
+                              rows=int(len(xs))):
+                if self._sharded is not None:
+                    raw = self._sharded(jnp.asarray(xs, jnp.float32))
+                    return np.asarray(proba_from_raw(raw,
+                                                     ensemble.n_outputs))
+                return np.asarray(self.predictor.proba(xs))
 
         self.batcher = BucketedBatcher(serve, max_batch=max_batch,
                                        max_wait_ms=max_wait_ms,
@@ -127,9 +139,19 @@ class GBDTServer:
         return self.batcher.buckets
 
     def predict(self, x: np.ndarray, timeout: float = 30.0) -> np.ndarray:
-        """Single request through the deadline batcher (blocking)."""
+        """Single request through the deadline batcher (blocking).
+
+        A timeout is accounted as a shed request (`metrics.shed_rate`)
+        and surfaces as `TimeoutError` — the caller never got a score,
+        so the latency reservoir is untouched."""
         fut = self.batcher.submit(0, np.asarray(x, np.float32))
-        return fut.get(timeout=timeout)
+        try:
+            return fut.get(timeout=timeout)
+        except queue.Empty:
+            self.metrics.note_shed()
+            raise TimeoutError(
+                f"predict timed out after {timeout}s (counted as shed; "
+                "batcher queue may be saturated)") from None
 
     def predict_batch(self, xs: np.ndarray) -> np.ndarray:
         """Synchronous bulk scoring through the same bucketed jit path.

@@ -56,8 +56,11 @@ from repro.core.boosting import (NEG_INF, BoostingParams, _gain_term,
 from repro.core.trees import ObliviousEnsemble
 from repro.kernels import ops, registry
 from repro.kernels import tuning as _tuning
+from repro.obs.trace import get_tracer
 from repro.serving.metrics import PercentileReservoir
 from repro.training.checkpoint import CheckpointManager
+
+_TRACER = get_tracer()
 
 
 # --------------------------------------------------------------------------
@@ -435,7 +438,18 @@ class GBDTTrainer:
                     hist, valid, bins_t, leaf, n_bins=n_bins, d=d,
                     l2=p.l2_reg)
                 leaf.block_until_ready()
-                split_s += time.perf_counter() - t1
+                t_end = time.perf_counter()
+                split_s += t_end - t1
+                if _TRACER.enabled:
+                    # the level clocks above are the span: record the
+                    # already-measured region (block_until_ready fenced)
+                    _TRACER.complete(
+                        "train/level", "train",
+                        start_ns=int(t0 * 1e9),
+                        duration_ns=int((t_end - t0) * 1e9),
+                        iteration=it, level=d, leaves=1 << d,
+                        hist_ms=(t1 - t0) * 1e3,
+                        split_ms=(t_end - t1) * 1e3)
                 sf_d.append(f_star)
                 sb_d.append(b_star)
             t2 = time.perf_counter()
@@ -457,6 +471,14 @@ class GBDTTrainer:
             loss_vals.append(float(val))
             self.metrics.note_iteration(N, hist_s, split_s, t3 - t2,
                                         t3 - t_iter, loss_vals[-1])
+            if _TRACER.enabled:
+                _TRACER.complete(
+                    "train/iteration", "train",
+                    start_ns=int(t_iter * 1e9),
+                    duration_ns=int((t3 - t_iter) * 1e9),
+                    iteration=it, rows=N,
+                    hist_ms=hist_s * 1e3, split_ms=split_s * 1e3,
+                    leaf_ms=(t3 - t2) * 1e3, loss=loss_vals[-1])
             done = it + 1
             if checkpoint is not None and checkpoint_every > 0 and (
                     done % checkpoint_every == 0 or done == p.n_trees):

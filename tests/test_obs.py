@@ -1,0 +1,303 @@
+"""Observability subsystem: span tracer (disabled overhead, ring
+eviction, Chrome-trace schema, cross-thread spans), the MetricsHub
+exports, and the deadline-SLO accounting in ServerMetrics."""
+import json
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.predictor import PredictConfig, Predictor
+from repro.core.trees import ObliviousEnsemble
+from repro.obs import MetricsHub
+from repro.obs.trace import Tracer, get_tracer, tracing
+from repro.scoring import ArraySink, ArraySource, BulkScorer, ScoreConfig
+from repro.serving.metrics import ServerMetrics
+
+
+def _rand_ensemble(seed=3, n_trees=9, depth=4, n_features=7,
+                   n_borders=9, n_outputs=1):
+    rng = np.random.default_rng(seed)
+    borders = jnp.asarray(
+        np.sort(rng.normal(size=(n_borders, n_features)), 0)
+        .astype(np.float32))
+    sf = jnp.asarray(rng.integers(0, n_features,
+                                  (n_trees, depth)).astype(np.int32))
+    sb = jnp.asarray(rng.integers(1, n_borders,
+                                  (n_trees, depth)).astype(np.int32))
+    lv = jnp.asarray(rng.normal(size=(n_trees, 2 ** depth, n_outputs))
+                     .astype(np.float32))
+    return ObliviousEnsemble(sf, sb, lv, borders,
+                             jnp.full((n_features,), n_borders, jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Tracer core
+# --------------------------------------------------------------------------
+def test_disabled_span_is_shared_noop_and_records_nothing():
+    tr = Tracer()
+    s1 = tr.span("a", "cat", big_attr="x" * 100)
+    s2 = tr.span("b")
+    assert s1 is s2                       # singleton: no allocation
+    with s1:
+        pass
+    tr.instant("i")
+    tr.counter("c", v=1.0)
+    tr.complete("x", start_ns=0, duration_ns=1)
+    assert len(tr) == 0
+
+
+def test_disabled_overhead_is_small():
+    # the hot-path contract: a disabled span() call is an attribute
+    # load + bool test.  Loose wall-clock bound (CI boxes are noisy) —
+    # this catches accidental allocation/locking on the disabled path,
+    # not nanosecond regressions.
+    tr = Tracer()
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tr.span("hot"):
+            pass
+    dt = time.perf_counter() - t0
+    assert dt / n < 5e-6, f"{dt / n * 1e9:.0f}ns per disabled span"
+
+
+def test_ring_eviction_is_fifo_and_counts_drops():
+    tr = Tracer(capacity=4)
+    tr.enable()
+    for i in range(7):
+        tr.instant(f"e{i}")
+    assert len(tr) == 4
+    assert [e["name"] for e in tr.events()] == ["e3", "e4", "e5", "e6"]
+    assert tr.dropped == 3
+
+
+def test_span_records_duration_and_attrs():
+    tr = Tracer()
+    tr.enable()
+    with tr.span("work", "cat", rows=128) as sp:
+        sp.set(result="ok")
+        time.sleep(0.002)
+    (e,) = tr.events()
+    assert e["ph"] == "X" and e["name"] == "work"
+    assert e["dur_us"] >= 2000
+    assert e["args"] == {"rows": 128, "result": "ok"}
+
+
+def test_complete_event_matches_span_timebase():
+    tr = Tracer()
+    tr.enable()
+    t0 = time.perf_counter_ns()
+    tr.complete("pre-timed", "train", start_ns=t0, duration_ns=5000,
+                level=2)
+    with tr.span("live"):
+        pass
+    pre, live = tr.events()
+    assert pre["dur_us"] == 5.0 and pre["args"] == {"level": 2}
+    # same clock: the pre-timed event sits just before the live span
+    assert pre["ts_us"] <= live["ts_us"]
+
+
+def test_chrome_export_schema(tmp_path):
+    tr = Tracer()
+    tr.enable()
+    with tr.span("dispatch/leaf_index", "kernel", op="leaf_index"):
+        pass
+    tr.instant("compile/raw", "compile", batch=64)
+    tr.counter("dispatch_count", "kernel", leaf_index=1.0)
+    path = tmp_path / "trace.json"
+    obj = tr.export_chrome(path)
+    loaded = json.loads(path.read_text())
+    assert loaded == json.loads(json.dumps(obj))
+    evs = loaded["traceEvents"]
+    metas = [e for e in evs if e["ph"] == "M"]
+    assert metas and metas[0]["name"] == "thread_name"
+    x = next(e for e in evs if e["ph"] == "X")
+    assert {"name", "cat", "ts", "dur", "pid", "tid", "args"} <= set(x)
+    assert isinstance(x["ts"], float) and x["pid"] == 1
+    assert x["tid"] == 0                  # idents remapped to small ints
+    i = next(e for e in evs if e["ph"] == "i")
+    assert i["s"] == "t"
+    c = next(e for e in evs if e["ph"] == "C")
+    assert c["args"] == {"leaf_index": 1.0}
+    assert loaded["otherData"]["dropped_events"] == 0
+
+
+def test_export_names_threads_that_already_exited(tmp_path):
+    tr = Tracer()
+    tr.enable()
+
+    def work():
+        with tr.span("bg-span"):
+            pass
+
+    t = threading.Thread(target=work, name="my-worker")
+    t.start()
+    t.join()                    # the thread is dead before export
+    obj = tr.export_chrome(tmp_path / "t.json")
+    names = [e["args"]["name"] for e in obj["traceEvents"]
+             if e["ph"] == "M"]
+    assert "my-worker" in names
+
+
+def test_tracing_context_restores_prior_state():
+    tr = Tracer()
+    with tracing(tr):
+        assert tr.enabled
+        with tracing(tr):
+            pass
+        assert tr.enabled            # inner exit restores True
+    assert not tr.enabled
+
+
+# --------------------------------------------------------------------------
+# Instrumentation integration: a traced BulkScorer run
+# --------------------------------------------------------------------------
+def test_bulk_scorer_trace_shows_prefetch_overlap(tmp_path):
+    ens = _rand_ensemble()
+    plan = Predictor.build(ens, PredictConfig(strategy="staged",
+                                              backend="ref"))
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(700, ens.n_features)).astype(np.float32)
+    tracer = get_tracer()
+    with tracing(tracer, clear=True):
+        scorer = BulkScorer({"m": plan},
+                            ScoreConfig(chunk_rows=256, prequantize=True))
+        scorer.score(ArraySource(x), {"m": ArraySink()})
+        events = tracer.events()
+    by_name = {}
+    for e in events:
+        by_name.setdefault(e["name"], []).append(e)
+    # the pipeline spans all fired, once per chunk for quantize/score
+    assert len(by_name["bulk/quantize"]) == len(by_name["bulk/score"])
+    assert len(by_name["bulk/quantize"]) >= 3
+    assert "bulk/sink" in by_name
+    # kernel dispatches are tagged with op/impl/layout
+    disp = [e for n, evs in by_name.items() if n.startswith("dispatch/")
+            for e in evs]
+    assert disp and all({"op", "impl", "layout"} <= set(e["args"])
+                        for e in disp)
+    # prefetch overlap: quantize happens on the worker thread, scoring
+    # on the caller thread — distinct tids is what makes the overlap
+    # visible on the exported timeline
+    q_tids = {e["tid"] for e in by_name["bulk/quantize"]}
+    s_tids = {e["tid"] for e in by_name["bulk/score"]}
+    assert q_tids and s_tids and not (q_tids & s_tids)
+    obj = tracer.export_chrome(tmp_path / "bulk.json")
+    thread_labels = {e["args"]["name"] for e in obj["traceEvents"]
+                     if e["ph"] == "M"}
+    assert "prefetcher" in thread_labels
+    assert not tracer.enabled        # context restored
+
+
+# --------------------------------------------------------------------------
+# Deadline-SLO accounting
+# --------------------------------------------------------------------------
+def test_server_metrics_slo_math():
+    m = ServerMetrics("m", deadline_ms=10.0)
+    m.note_batch(4, 8, 0.005)        # 5ms: hit, 4 rows
+    m.note_batch(2, 2, 0.020)        # 20ms: miss, 2 rows
+    m.note_shed(3)
+    s = m.snapshot()
+    assert s["deadline_hits"] == 4 and s["deadline_misses"] == 2
+    assert s["deadline_attainment"] == pytest.approx(4 / 6)
+    assert s["shed_requests"] == 3
+    assert s["shed_rate"] == pytest.approx(3 / 9)   # 6 served + 3 shed
+    # p99-under-deadline sees only the 5ms batch; overall p99 sees both
+    assert s["p99_under_deadline_ms"] == pytest.approx(5.0)
+    assert s["batch_p99_ms"] > 5.0
+
+
+def test_server_metrics_slo_disabled_is_vacuous():
+    m = ServerMetrics("m")
+    m.note_batch(4, 4, 0.5)
+    s = m.snapshot()
+    assert s["deadline_ms"] is None
+    assert s["deadline_attainment"] == 1.0
+    assert s["deadline_hits"] == 0 and s["deadline_misses"] == 0
+    assert s["shed_rate"] == 0.0
+
+
+def test_server_metrics_interval_rates_and_reset():
+    m = ServerMetrics("m")
+    m.note_batch(10, 10, 0.001)
+    s1 = m.snapshot()
+    assert s1["interval_requests_per_s"] > 0
+    s2 = m.snapshot()                 # nothing since the last poll
+    assert s2["interval_requests_per_s"] == 0.0
+    assert s2["requests_per_s"] > 0   # lifetime rate persists
+    m.reset()
+    s3 = m.snapshot()
+    assert s3["requests"] == 0 and s3["batch_p99_ms"] == 0.0
+
+
+def test_server_metrics_merge_does_not_consume_intervals():
+    a, b = ServerMetrics("m", deadline_ms=5.0), \
+        ServerMetrics("m", deadline_ms=5.0)
+    a.note_batch(3, 4, 0.001)
+    b.note_batch(5, 8, 0.009)
+    fleet = ServerMetrics.merge([a, b])
+    assert fleet["replicas"] == 2 and fleet["requests"] == 8
+    assert fleet["deadline_hits"] == 3 and fleet["deadline_misses"] == 5
+    assert fleet["deadline_attainment"] == pytest.approx(3 / 8)
+    # the merge read must not have eaten either part's interval window
+    assert a.snapshot()["interval_requests_per_s"] > 0
+    assert b.snapshot()["interval_requests_per_s"] > 0
+
+
+# --------------------------------------------------------------------------
+# MetricsHub
+# --------------------------------------------------------------------------
+def test_hub_register_forms_and_snapshot():
+    hub = MetricsHub()
+    m = ServerMetrics("m")
+    hub.register("serving/m", m)                       # .snapshot()
+    hub.register("adhoc", lambda: {"x": 1})            # callable
+    hub.register("static", {"y": 2.5})                 # mapping
+    with pytest.raises(KeyError):
+        hub.register("adhoc", lambda: {})              # no silent shadow
+    hub.register("adhoc", lambda: {"x": 9}, replace=True)
+    snap = hub.snapshot()
+    assert snap["adhoc"] == {"x": 9} and snap["static"] == {"y": 2.5}
+    assert snap["serving/m"]["requests"] == 0
+    assert hub.namespaces() == ["adhoc", "serving/m", "static"]
+
+
+def test_hub_failing_source_is_isolated():
+    hub = MetricsHub()
+
+    def boom():
+        raise RuntimeError("dead model")
+
+    hub.register("bad", boom)
+    hub.register("good", {"ok": 1})
+    snap = hub.snapshot()
+    assert snap["good"] == {"ok": 1}
+    assert "RuntimeError" in snap["bad"]["error"]
+
+
+def test_hub_prometheus_format(tmp_path):
+    hub = MetricsHub(prefix="repro")
+    hub.register("scoring/bulk", {"rows_per_s": 1234.5, "rows": 10,
+                                  "model": "cover type", "exact": True,
+                                  "nested": {"raw": 3},
+                                  "skipme": [1, 2]})
+    text = hub.export_prometheus(tmp_path / "m.prom")
+    assert (tmp_path / "m.prom").read_text() == text
+    assert "# TYPE repro_scoring_bulk_rows_per_s gauge" in text
+    assert 'model="cover type"' in text
+    assert "repro_scoring_bulk_rows_per_s" in text
+    assert "repro_scoring_bulk_exact" in text          # bool -> gauge
+    assert "repro_scoring_bulk_nested_raw" in text     # one-level flatten
+    assert "skipme" not in text                        # lists skipped
+
+
+def test_hub_json_export(tmp_path):
+    hub = MetricsHub()
+    hub.register("a", {"v": 1})
+    obj = hub.export_json(tmp_path / "m.json")
+    loaded = json.loads((tmp_path / "m.json").read_text())
+    assert loaded["metrics"]["a"]["v"] == 1
+    assert "collected_at" in loaded and "collected_at" in obj

@@ -1,0 +1,129 @@
+"""Perf-regression gate: classification of gated metrics, the
+tolerance-band compare, and positive/negative controls against the
+committed results/perf baselines (no bench runs — the gate's compare
+path is a pure function of scenario dicts)."""
+import copy
+import json
+
+import pytest
+
+from repro.launch.perf_gate import (BASELINE_DIR, BENCHES, classify,
+                                    compare, load_dir, main)
+
+
+def _baselines():
+    base = load_dir(BASELINE_DIR)
+    assert base, "committed results/perf baselines missing"
+    prefixes = tuple(p for _, ps in BENCHES.values() for p in ps)
+    return {k: v for k, v in base.items() if k.startswith(prefixes)}
+
+
+def test_classify_families():
+    assert classify("speedup_vs_naive") == "ratio"
+    assert classify("parity_ratio_vs_jitted_legacy") == "ratio"
+    assert classify("max_abs_err") == "err"
+    assert classify("exact") == "flag"
+    assert classify("splits_equal_vs_seed") == "flag"
+    assert classify("compiles") == "zero"
+    assert classify("binarize_calls") == "zero"
+    # absolute wall/throughput numbers are deliberately not gated
+    assert classify("us_per_call") is None
+    assert classify("rows_per_s") is None
+    assert classify("wall_s") is None
+
+
+def test_baselines_pass_against_themselves():
+    base = _baselines()
+    rows = compare(base, base)
+    assert rows, "no gated metrics found in committed baselines"
+    assert all(r["status"] == "ok" for r in rows)
+    # the committed trajectory actually exercises every gate family
+    kinds = {r["kind"] for r in rows}
+    assert {"ratio", "err", "flag", "zero"} <= kinds
+
+
+def test_positive_control_injected_regressions_fail():
+    base = _baselines()
+    fresh = copy.deepcopy(base)
+    # collapse-class slowdown, parity rot, flag degradation, and a
+    # broken zero-dispatch contract — one per gate family
+    fresh["scoring-bench__bulk-prequant"]["speedup_vs_naive"] = 0.9
+    fresh["layout-sweep__bitpacked"]["max_abs_err"] = 0.5
+    fresh["training-bench__pool"]["splits_equal_vs_seed"] = False
+    fresh["mesh-bench__k4"]["binarize_calls"] = 3
+    rows = compare(base, fresh)
+    bad = {(r["scenario"], r["metric"]) for r in rows
+           if r["status"] == "REGRESSION"}
+    assert bad == {
+        ("scoring-bench__bulk-prequant", "speedup_vs_naive"),
+        ("layout-sweep__bitpacked", "max_abs_err"),
+        ("training-bench__pool", "splits_equal_vs_seed"),
+        ("mesh-bench__k4", "binarize_calls"),
+    }
+
+
+def test_tolerance_band_boundaries():
+    base = {"s": {"speedup_vs_x": 2.0}}
+    at_floor = compare(base, {"s": {"speedup_vs_x": 2.0 * 0.4}})
+    assert all(r["status"] == "ok" for r in at_floor)
+    below = compare(base, {"s": {"speedup_vs_x": 2.0 * 0.39}})
+    assert any(r["status"] == "REGRESSION" for r in below)
+    # a tighter band flags what the default tolerates
+    tight = compare(base, {"s": {"speedup_vs_x": 1.7}}, ratio_tol=0.1)
+    assert any(r["status"] == "REGRESSION" for r in tight)
+
+
+def test_missing_fresh_scenario_is_skipped_not_failed():
+    base = {"mesh-bench__k8": {"speedup_vs_k1": 1.6}}
+    rows = compare(base, {})
+    assert [r["status"] for r in rows] == ["skipped"]
+
+
+def test_missing_metric_in_fresh_is_schema_break():
+    base = {"s": {"speedup_vs_x": 2.0, "exact": True}}
+    rows = compare(base, {"s": {"exact": True}})
+    bad = [r for r in rows if r["status"] == "REGRESSION"]
+    assert len(bad) == 1 and bad[0]["metric"] == "speedup_vs_x"
+    assert "missing" in bad[0]["detail"]
+
+
+def test_err_metric_floor_allows_noise_on_zero_baselines():
+    # baseline max_abs_err == 0.0 must not reject fresh fp rounding
+    base = {"s": {"max_abs_err": 0.0}}
+    ok = compare(base, {"s": {"max_abs_err": 5e-6}})
+    assert all(r["status"] == "ok" for r in ok)
+    bad = compare(base, {"s": {"max_abs_err": 1e-3}})
+    assert any(r["status"] == "REGRESSION" for r in bad)
+
+
+def test_zero_gate_only_binds_zero_baselines():
+    base = {"s": {"compiles": 2}}
+    rows = compare(base, {"s": {"compiles": 5}})
+    assert all(r["status"] == "ok" for r in rows)   # nonzero base: free
+
+
+def test_main_fresh_dir_end_to_end(tmp_path):
+    # negative control through the CLI: baselines vs a copy pass...
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    for name, snap in _baselines().items():
+        (fresh / f"{name}.json").write_text(json.dumps(snap))
+    assert main(["--check", "--fresh-dir", str(fresh)]) == 0
+    # ...and an injected collapse fails with a non-zero exit
+    hot = json.loads(
+        (fresh / "scoring-bench__bulk-prequant.json").read_text())
+    hot["speedup_vs_naive"] = 0.5
+    (fresh / "scoring-bench__bulk-prequant.json").write_text(
+        json.dumps(hot))
+    report = tmp_path / "report.json"
+    assert main(["--check", "--fresh-dir", str(fresh),
+                 "--json-out", str(report)]) == 1
+    rows = json.loads(report.read_text())
+    assert any(r["status"] == "REGRESSION" for r in rows)
+    # without --check the regression is reported but the exit is 0
+    assert main(["--fresh-dir", str(fresh)]) == 0
+
+
+def test_unknown_bench_selection_errors():
+    with pytest.raises(SystemExit):
+        main(["--benches", "nope", "--fresh-dir", "/tmp"])
